@@ -1,0 +1,75 @@
+"""Paper Fig. 5: voltage-trajectory accuracy and step counts, Backward Euler
+(dt = 25us / 5us / 1us ref) vs BDF (atol 1e-2 / 1e-3 / 1e-4 ref), on a
+single-spike window and a longer multi-spike run (phase-shift accumulation).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import calibration, emit, soma_model, timeit
+from repro.core import bdf
+from repro.core.calibrate import spikes_in_trace
+from repro.core.fixed_step import run_fixed
+
+
+def _spike_times(ts, vs, thr=-20.0):
+    out = []
+    for i in range(1, len(ts)):
+        if vs[i - 1] <= thr < vs[i]:
+            f = (thr - vs[i - 1]) / (vs[i] - vs[i - 1])
+            out.append(ts[i - 1] + f * (ts[i] - ts[i - 1]))
+    return np.array(out)
+
+
+def _fixed_curve(model, iinj, T, dt):
+    y0 = model.init_state()
+    (_, ns, tr), secs = timeit(
+        lambda: run_fixed(model, y0, T, iinj, method="cnexp", dt=dt,
+                          record_every=1))
+    ts = np.arange(1, ns + 1) * dt
+    return ts, np.asarray(tr), ns, secs
+
+
+def _bdf_curve(model, iinj, T, atol):
+    opts = bdf.BDFOptions(atol=atol)
+    st0 = bdf.reinit(model, 0.0, model.init_state(), iinj, opts)
+    stepf = jax.jit(lambda s: bdf.step(model, s, T, iinj, opts))
+    stepf(st0)                                     # compile
+    import time
+    t0 = time.time()
+    st = st0
+    ts, vs = [0.0], [float(st.zn[0][0])]
+    while float(st.t) < T and not bool(st.failed):
+        st = stepf(st)
+        ts.append(float(st.t))
+        vs.append(float(st.zn[0][model.idx_vsoma]))
+    return np.array(ts), np.array(vs), int(st.nst), time.time() - t0
+
+
+def run(T: float = 100.0) -> None:
+    model = soma_model()
+    iinj = 1.3 * calibration()["i_threshold"]      # suprathreshold clamp
+    ts_ref, vs_ref, ns_ref, _ = _fixed_curve(model, iinj, T, 0.001)
+    s_ref = _spike_times(ts_ref, vs_ref)
+
+    for dt in (0.025, 0.005):
+        ts, vs, ns, secs = _fixed_curve(model, iinj, T, dt)
+        s = _spike_times(ts, vs)
+        n = min(len(s), len(s_ref))
+        shift = np.abs(s[:n] - s_ref[:n]).max() if n else float("nan")
+        emit(f"fig5/euler_dt{dt*1000:.0f}us", secs * 1e6,
+             f"steps={ns};spikes={len(s)};max_phase_shift_ms={shift:.4f}")
+
+    for atol in (1e-2, 1e-3, 1e-4):
+        ts, vs, ns, secs = _bdf_curve(model, iinj, T, atol)
+        s = _spike_times(ts, vs)
+        n = min(len(s), len(s_ref))
+        shift = np.abs(s[:n] - s_ref[:n]).max() if n else float("nan")
+        emit(f"fig5/cvode_atol{atol:g}", secs * 1e6,
+             f"steps={ns};spikes={len(s)};max_phase_shift_ms={shift:.4f};"
+             f"step_reduction_vs_25us={int(T/0.025)/max(ns,1):.1f}x")
+
+
+if __name__ == "__main__":
+    run()

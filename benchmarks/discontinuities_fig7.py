@@ -1,0 +1,63 @@
+"""Paper Fig. 7: step count + runtime vs discontinuity (synaptic event) rate
+— the paper's key sensitivity: CVODE wins below ~1-1.6 kHz of events, where
+each event resets the IVP.  Events at fixed frequency, three weights."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, soma_model, timeit
+from repro.core import bdf
+from repro.core.fixed_step import make_stepper
+
+FREQS = [10.0, 30.0, 100.0, 300.0, 1000.0, 3000.0]     # events / second
+WEIGHTS = [2e-4, 1e-3, 5e-3]                           # uS per event
+
+
+def _bdf_run(model, T, freq, w, atol=1e-3):
+    period = 1000.0 / freq
+    opts = bdf.BDFOptions(atol=atol)
+    n_ev = int(T / period)
+    adv = jax.jit(lambda st, tl: bdf.advance_to(model, st, tl, 0.0, opts))
+    dlv = jax.jit(lambda st: bdf.deliver_event(model, st, w, 0.0, 0.0, opts))
+
+    def run():
+        st = bdf.reinit(model, 0.0, model.init_state(), 0.0, opts)
+        for k in range(1, n_ev + 1):
+            st = adv(st, k * period)
+            st = dlv(st)
+        return adv(st, T)
+
+    return timeit(run)
+
+
+def _euler_run(model, T, freq, w, dt=0.025):
+    period = 1000.0 / freq
+    step = make_stepper(model, "cnexp", dt)
+    n = int(T / dt)
+
+    def body(y, i):
+        t = i * dt
+        hit = jnp.floor((t + dt) / period) > jnp.floor(t / period)
+        y = model.apply_event(y, jnp.where(hit, w, 0.0), 0.0)
+        return step(y, 0.0), None
+
+    runner = jax.jit(lambda y0: jax.lax.scan(body, y0, jnp.arange(n))[0])
+    return timeit(lambda: runner(model.init_state())), n
+
+
+def run(T: float = 250.0) -> None:
+    model = soma_model()
+    for w in WEIGHTS:
+        for freq in FREQS:
+            st, secs_b = _bdf_run(model, T, freq, w)
+            (_, secs_e), n_fixed = _euler_run(model, T, freq, w)
+            nst = int(st.nst)
+            emit(f"fig7/w{w:g}_f{freq:g}Hz", secs_b * 1e6,
+                 f"cvode_steps={nst};resets={int(st.nreset)};"
+                 f"euler_steps={n_fixed};step_ratio={n_fixed/max(nst,1):.1f}x;"
+                 f"runtime_ratio={secs_e/max(secs_b,1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""Paper Fig. 9: time-to-solution of six solvers across the five spiking
+regimes and increasing network size.
+
+Solvers (paper labels):
+  1a bsp_cnexp      1b bsp_euler       1c fap_euler
+  2a bsp_derivimpl  2b bsp_cvode       2c fap_cvode
+  2c-eg2 fap_cvode + half-dt event grouping
+  2c-eg1 fap_cvode + full-dt event grouping
+
+Wall-clock excludes compilation (runner called twice; second call timed),
+matching the paper's steady-state time-to-solution measure.  Sizes/durations
+are scaled for one CPU core (DESIGN.md §7); ratios are the reported result.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, regime_iinj, soma_model
+from repro.core import bdf, exec_bsp, exec_fap, network
+
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))
+# compile count dominates on 1 CPU core: 8 solvers x 5 regimes x |SIZES|
+SIZES = [64] if QUICK else ([64, 256] if FULL else [64])
+REGIME_T = {"quiet": 100.0, "slow": 50.0, "moderate": 50.0,
+            "fast": 25.0, "burst": 25.0}
+if QUICK:
+    REGIME_T = {k: min(v, 25.0) for k, v in REGIME_T.items()}
+
+OPTS = bdf.BDFOptions(atol=1e-3)
+
+
+def _solvers(model, net, iinj, T):
+    return {
+        "1a_bsp_cnexp": lambda: exec_bsp.make_bsp_fixed_runner(
+            model, net, iinj, T, method="cnexp"),
+        "1b_bsp_euler": lambda: exec_bsp.make_bsp_fixed_runner(
+            model, net, iinj, T, method="euler"),
+        "1c_fap_euler": lambda: exec_fap.make_fap_fixed_runner(
+            model, net, iinj, T, method="euler"),
+        "2a_bsp_derivimpl": lambda: exec_bsp.make_bsp_fixed_runner(
+            model, net, iinj, T, method="derivimplicit"),
+        "2b_bsp_cvode": lambda: exec_bsp.make_bsp_vardt_runner(
+            model, net, iinj, T, opts=OPTS),
+        "2c_fap_cvode": lambda: exec_fap.make_fap_vardt_runner(
+            model, net, iinj, T, opts=OPTS),
+        "2c_eg2_fap_cvode": lambda: exec_fap.make_fap_vardt_runner(
+            model, net, iinj, T, opts=OPTS, eg_window=0.0125),
+        "2c_eg1_fap_cvode": lambda: exec_fap.make_fap_vardt_runner(
+            model, net, iinj, T, opts=OPTS, eg_window=0.025),
+    }
+
+
+def _run_one(make):
+    import jax
+    runner = make()
+    jax.block_until_ready(runner())      # compile + run
+    t0 = time.time()
+    out = jax.block_until_ready(runner())  # timed
+    secs = time.time() - t0
+    res = out if isinstance(out, exec_bsp.RunResult) else out[0]
+    return res, secs
+
+
+def run() -> None:
+    model = soma_model()
+    for n in SIZES:
+        net = network.make_network(n, k_in=16, seed=1)
+        for regime, T in REGIME_T.items():
+            iinj = regime_iinj(n, regime, seed=n)
+            ref_secs = None
+            for name, make in _solvers(model, net, iinj, T).items():
+                res, secs = _run_one(make)
+                if name == "2a_bsp_derivimpl":
+                    ref_secs = secs
+                speed = (f";speedup_vs_2a={ref_secs/max(secs,1e-12):.2f}x"
+                         if ref_secs and name.startswith("2c") else "")
+                emit(f"fig9/{regime}_n{n}_{name}", secs * 1e6 / max(T, 1e-9),
+                     f"t_bio_ms={T};wall_s={secs:.3f};steps={int(res.n_steps)};"
+                     f"events={int(res.n_events)};resets={int(res.n_resets)};"
+                     f"spikes={int(res.rec.count.sum())};"
+                     f"failed={bool(res.failed)};dropped={int(res.dropped)}"
+                     + speed)
+
+
+if __name__ == "__main__":
+    run()

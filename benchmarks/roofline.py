@@ -1,0 +1,85 @@
+"""Roofline analysis from the dry-run artifacts (assignment §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  The dry-run records *per-device* quantities (compiled
+SPMD modules carry local shapes), so:
+
+  compute term    = hlo_flops_per_device / 197e12          [s]
+  memory term     = hlo_bytes_per_device / 819e9           [s]
+  collective term = collective_bytes_per_device / 50e9     [s]
+
+dominant = argmax; roofline fraction = (model_flops / chips / 197e12)
+divided by the dominant term — the fraction of peak the step would sustain
+if it ran exactly at the roofline bound.  model_flops_ratio catches
+remat/redundancy waste (MODEL_FLOPS / total HLO flops).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+OUT_CSV = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "roofline.csv")
+
+
+def analyse(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    flops = rec.get("hlo_flops_per_device") or rec["cost_raw"]["flops"]
+    bytes_ = rec.get("hlo_bytes_per_device") or rec["cost_raw"]["bytes_accessed"]
+    coll = rec.get("collective_bytes_per_device", 0)
+    chips = rec.get("n_chips", 256)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    t_step = max(terms.values())
+    mf = rec.get("model_flops", 0.0)
+    useful = mf / chips / PEAK_FLOPS
+    frac = useful / t_step if t_step > 0 else 0.0
+    ratio = mf / (flops * chips) if flops else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips, "compute_s": t_c, "memory_s": t_m,
+        "collective_s": t_x, "dominant": dom, "roofline_fraction": frac,
+        "model_flops_ratio": ratio,
+        "mem_temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "mem_args_gib": rec["memory"]["argument_bytes"] / 2**30,
+    }
+
+
+def run(mesh: str = "single") -> None:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rec = json.load(open(path))
+        row = analyse(rec)
+        if row is None or (mesh != "all" and row["mesh"] != mesh):
+            continue
+        rows.append(row)
+        emit(f"roofline/{row['arch']}_{row['shape']}_{row['mesh']}",
+             max(row["compute_s"], row["memory_s"], row["collective_s"]) * 1e6,
+             f"compute_s={row['compute_s']:.3e};memory_s={row['memory_s']:.3e};"
+             f"collective_s={row['collective_s']:.3e};dominant={row['dominant']};"
+             f"roofline_fraction={row['roofline_fraction']:.3f};"
+             f"model_flops_ratio={row['model_flops_ratio']:.3f};"
+             f"temp_gib={row['mem_temp_gib']:.2f}")
+    if rows:
+        keys = list(rows[0])
+        with open(OUT_CSV, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for r in rows:
+                f.write(",".join(str(r[k]) for k in keys) + "\n")
+
+
+if __name__ == "__main__":
+    run(mesh="all")

@@ -1,0 +1,37 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  REPRO_BENCH_QUICK=1 trims sizes."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (accuracy_fig5, delays_fig3, discontinuities_fig7,
+                            lab_experiment_fig8, regimes_fig9, roofline,
+                            speedup_fig10, stiffness_fig6)
+    modules = [
+        ("fig3", delays_fig3.run),
+        ("fig5", accuracy_fig5.run),
+        ("fig6", stiffness_fig6.run),
+        ("fig7", discontinuities_fig7.run),
+        ("fig8", lab_experiment_fig8.run),
+        ("fig9", regimes_fig9.run),
+        ("fig10", speedup_fig10.run),
+        ("roofline", lambda: roofline.run(mesh="all")),
+    ]
+    failures = 0
+    for name, fn in modules:
+        try:
+            fn()
+        except Exception:                                   # noqa: BLE001
+            failures += 1
+            print(f"{name}/ERROR,0,{traceback.format_exc(limit=1).strip()!r}",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

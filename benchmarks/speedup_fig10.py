@@ -1,0 +1,60 @@
+"""Paper Fig. 10 / §4.5: overall speed-up estimate for a mixed-regime
+population — regime percentages from the laboratory-experiment census,
+runtimes measured per regime, combined as the paper combines them:
+   T_solver = sum_r pct_r * t_solver(r);  speedup = T_2a / T_2c(+variants).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, regime_iinj, soma_model
+from repro.core import bdf, exec_bsp, exec_fap, network
+from benchmarks.lab_experiment_fig8 import PCTS
+
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+N = 64 if QUICK else 128
+T = 25.0 if QUICK else 50.0
+OPTS = bdf.BDFOptions(atol=1e-3)
+
+
+def _wall(make):
+    import jax
+    runner = make()
+    jax.block_until_ready(runner())
+    t0 = time.time()
+    jax.block_until_ready(runner())
+    return time.time() - t0
+
+
+def run() -> None:
+    model = soma_model()
+    net = network.make_network(N, k_in=16, seed=4)
+    t_2a, t_2c, t_eg2, t_eg1 = 0.0, 0.0, 0.0, 0.0
+    for regime, pct in PCTS.items():
+        iinj = regime_iinj(N, regime, seed=7)
+        w2a = _wall(lambda: exec_bsp.make_bsp_fixed_runner(
+            model, net, iinj, T, method="derivimplicit"))
+        w2c = _wall(lambda: exec_fap.make_fap_vardt_runner(
+            model, net, iinj, T, opts=OPTS))
+        weg2 = _wall(lambda: exec_fap.make_fap_vardt_runner(
+            model, net, iinj, T, opts=OPTS, eg_window=0.0125))
+        weg1 = _wall(lambda: exec_fap.make_fap_vardt_runner(
+            model, net, iinj, T, opts=OPTS, eg_window=0.025))
+        t_2a += pct * w2a
+        t_2c += pct * w2c
+        t_eg2 += pct * weg2
+        t_eg1 += pct * weg1
+        emit(f"fig10/{regime}", w2c * 1e6,
+             f"pct={pct};t2a_s={w2a:.3f};t2c_s={w2c:.3f};"
+             f"t2c_eg2_s={weg2:.3f};t2c_eg1_s={weg1:.3f}")
+    emit("fig10/overall", t_2c * 1e6,
+         f"speedup_precise={t_2a/max(t_2c,1e-12):.2f}x;"
+         f"speedup_eg_half={t_2a/max(t_eg2,1e-12):.2f}x;"
+         f"speedup_eg_full={t_2a/max(t_eg1,1e-12):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Fig. 6: step count + runtime vs solution stiffness (continuous
+current as %% of threshold), Backward Euler dt=25us vs CVODE atol=1e-3."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import calibration, emit, soma_model, timeit
+from repro.core import bdf
+from repro.core.fixed_step import run_fixed
+
+PCTS = [0.0, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 5.0]
+
+
+def run(T: float = 500.0) -> None:
+    model = soma_model()
+    i_th = calibration()["i_threshold"]
+    n_fixed = int(T / 0.025)
+
+    for pct in PCTS:
+        iinj = pct * i_th
+        y0 = model.init_state()
+        (_, ns, _), secs_e = timeit(
+            lambda: run_fixed(model, y0, T, iinj, method="cnexp", dt=0.025))
+        opts = bdf.BDFOptions(atol=1e-3)
+        adv = jax.jit(lambda st: bdf.advance_to(
+            model, st, T, iinj, opts, max_steps=500000))
+
+        def bdf_run():
+            st = bdf.reinit(model, 0.0, model.init_state(), iinj, opts)
+            return adv(st)
+
+        st, secs_b = timeit(bdf_run)
+        nst = int(st.nst)
+        emit(f"fig6/pct{pct:g}", secs_b * 1e6,
+             f"euler_steps={n_fixed};cvode_steps={nst};"
+             f"step_ratio={n_fixed/max(nst,1):.1f}x;"
+             f"runtime_ratio={secs_e/max(secs_b,1e-9):.2f}x;"
+             f"failed={bool(st.failed)}")
+
+
+if __name__ == "__main__":
+    run()

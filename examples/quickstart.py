@@ -1,0 +1,51 @@
+"""Quickstart: the paper in one file.
+
+Simulates a single detailed (HH) neuron two ways and prints what the paper's
+Fig. 5/6 show: the variable-order variable-timestep BDF integrator needs
+orders of magnitude fewer steps than fixed-step Backward Euler at matched
+accuracy — and synaptic discontinuities (IVP resets) are what it pays for.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import bdf, morphology
+from repro.core.cell import CellModel
+from repro.core.fixed_step import run_fixed
+
+
+def main():
+    model = CellModel(morphology.branched_tree(depth=2, seg_per_branch=2),
+                      with_plasticity=True)
+    print(f"neuron: {model.C} compartments, {model.n_state} ODE states "
+          "(HH Na/K/leak + synapses + correlated plasticity pair)")
+    t_end, iinj = 200.0, 0.05          # gentle subthreshold drive (quiet regime)
+
+    # --- reference fixed-step (paper method 2a) --------------------------
+    y_fix, n_fix, _ = run_fixed(model, model.init_state(), t_end, iinj,
+                                method="derivimplicit", dt=0.025)
+    print(f"fixed dt=25us     : {n_fix:6d} steps")
+
+    # --- the paper's solver: CVODE-style BDF(1..5) -----------------------
+    opts = bdf.BDFOptions(atol=1e-3)
+    st = bdf.reinit(model, 0.0, model.init_state(), iinj, opts)
+    st = jax.jit(lambda s: bdf.advance_to(model, s, t_end, iinj, opts))(st)
+    print(f"vardt BDF atol=1e-3: {int(st.nst):6d} steps "
+          f"({n_fix / int(st.nst):.0f}x fewer), final order q={int(st.q)}, "
+          f"h={float(st.h):.3f} ms, newton iters={int(st.nni)}")
+    dv = abs(float(st.zn[0][0]) - float(y_fix[0]))
+    print(f"|V_soma difference| = {dv:.4f} mV")
+
+    # --- a synaptic discontinuity = IVP reset ----------------------------
+    st = bdf.deliver_event(model, st, 5e-3, 0.0, iinj, opts)
+    print(f"after synaptic event: order reset to q={int(st.q)}, "
+          f"h={float(st.h):.5f} ms  <- the cost the paper's event-grouping "
+          "variants amortise")
+    st = jax.jit(lambda s: bdf.advance_to(model, s, t_end + 50.0, iinj,
+                                          opts))(st)
+    print(f"recovered: q={int(st.q)}, h={float(st.h):.3f} ms, "
+          f"failed={bool(st.failed)}")
+
+
+if __name__ == "__main__":
+    main()

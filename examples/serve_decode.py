@@ -1,0 +1,15 @@
+"""Batched serving example: continuous-batching-lite decode over the unified
+LM API (any --arch from the registry works; reduced configs on CPU).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main([
+        "--arch", "qwen3-moe-30b-a3b", "--reduced",
+        "--requests", "8", "--slots", "4", "--max-new", "16",
+        "--cache-len", "128",
+    ]))

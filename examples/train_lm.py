@@ -1,0 +1,19 @@
+"""End-to-end LM training driver on the shared substrate: a ~20M-parameter
+smollm-family model for a few hundred steps with checkpointing + fault
+tolerance (the CPU-scaled stand-in for the 100M-class run; pass bigger
+--d-model/--n-layers on real hardware — the code path is identical to the
+full assigned configs).
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.exit(main([
+        "--arch", "smollm-135m",
+        "--d-model", "192", "--n-layers", "6", "--vocab", "2048",
+        "--steps", "200", "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_train_lm", "--save-every", "50",
+    ]))

@@ -1,0 +1,65 @@
+"""Generate the §Dry-run / §Roofline markdown tables from artifacts."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+from benchmarks.roofline import analyse  # noqa: E402
+
+DD = "experiments/dryrun"
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(mesh):
+    rows = []
+    for p in sorted(glob.glob(f"{DD}/*__{mesh}.json")):
+        r = json.load(open(p))
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — | — |")
+            continue
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {fmt_bytes(m['argument_bytes'])} | "
+            f"{fmt_bytes(m['temp_bytes'])} | "
+            f"{r.get('hlo_flops_per_device', 0)/1e12:.2f} | "
+            f"{r.get('collective_bytes_per_device', 0)/2**30:.2f} |")
+    head = ("| arch | shape | status | args GiB/dev | temp GiB/dev | "
+            "HLO TFLOP/dev | coll GiB/dev |\n|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def roofline_table(mesh):
+    rows = []
+    for p in sorted(glob.glob(f"{DD}/*__{mesh}.json")):
+        r = json.load(open(p))
+        a = analyse(r)
+        if a is None:
+            continue
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.3e} | "
+            f"{a['memory_s']:.3e} | {a['collective_s']:.3e} | "
+            f"**{a['dominant']}** | {a['roofline_fraction']:.3f} | "
+            f"{a['model_flops_ratio']:.3f} |")
+    head = ("| arch | shape | compute s | memory s | collective s | dominant "
+            "| roofline frac | MODEL/HLO |\n|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("### Single-pod (16x16 = 256 chips)\n")
+        print(dryrun_table("single"))
+        print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+        print(dryrun_table("multi"))
+    if which in ("roofline", "all"):
+        print("\n### Roofline (single-pod)\n")
+        print(roofline_table("single"))

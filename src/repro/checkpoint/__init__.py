@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,  # noqa: F401
+                                         save_checkpoint)
+from repro.checkpoint.fault_tolerance import RestartManager, StragglerMonitor  # noqa: F401

@@ -1,0 +1,112 @@
+"""Sharded checkpoint save/restore with atomic commit and integrity manifest.
+
+Layout of one checkpoint::
+
+    <dir>/step_000123/
+        manifest.json      # tree structure, shapes, dtypes, sizes, extras
+        arr_00000.npy ...  # one file per leaf (host-local full array here;
+                           # in a multi-host deployment each host writes its
+                           # process-local shards — path layout is identical)
+
+Atomicity: everything is written into ``step_X.tmp`` and renamed once the
+manifest (written LAST) is on disk — a crashed save can never be mistaken
+for a complete checkpoint.  ``restore_checkpoint`` optionally reshards onto
+a different mesh (elastic resume, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    extras: Optional[dict] = None) -> str:
+    """tree: pytree of arrays (params, opt state, ...); extras: JSON-ables."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    entries = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        entries.append({"file": fname, "shape": list(arr.shape),
+                        "dtype": str(arr.dtype), "bytes": int(arr.nbytes)})
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "entries": entries,
+        "extras": extras or {},
+        "total_bytes": int(sum(e["bytes"] for e in entries)),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like_tree: Any,
+                       shardings: Any = None):
+    """Restore into the structure of ``like_tree``; optionally device_put
+    each leaf with the given sharding tree (elastic resharding)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(like_tree)
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves)}")
+    out = []
+    for i, (entry, like) in enumerate(zip(manifest["entries"], leaves)):
+        arr = np.load(os.path.join(path, entry["file"]))
+        if int(arr.nbytes) != entry["bytes"]:
+            raise IOError(f"integrity failure on {entry['file']}")
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"leaf {i} shape {arr.shape} != expected {tuple(like.shape)}")
+        out.append(arr.astype(like.dtype))
+    if shardings is not None:
+        sh_leaves = treedef.flatten_up_to(shardings)
+        out = [jax.device_put(a, s) for a, s in zip(out, sh_leaves)]
+    else:
+        out = [jax.numpy.asarray(a) for a in out]
+    return treedef.unflatten(out), manifest["extras"]
+
+
+def prune_checkpoints(ckpt_dir: str, keep: int = 3):
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and not n.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

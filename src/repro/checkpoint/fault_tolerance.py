@@ -1,0 +1,121 @@
+"""Fault tolerance for long training runs (DESIGN.md §6).
+
+``RestartManager`` wraps the training loop:
+  * periodic checkpoints (params, optimizer, data cursor, RNG) with pruning,
+  * automatic resume from the latest complete checkpoint on (re)start,
+  * NaN/Inf-loss quarantine: restore last checkpoint and skip the poisoned
+    data step (a common real-cluster failure mode),
+  * failure injection hooks for tests (simulated preemption).
+
+``StragglerMonitor`` tracks per-step wall time and flags outliers; on real
+pods the hook triggers re-sharding away from the slow host — here it feeds
+the launcher's logging.  Note the paper's FAP execution model is itself the
+structural answer to stragglers for the simulation workload: there is no
+barrier to straggle on (paper §4.3).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.checkpoint.checkpoint import (latest_step, prune_checkpoints,
+                                         restore_checkpoint, save_checkpoint)
+
+
+@dataclass
+class StragglerMonitor:
+    window: int = 32
+    threshold: float = 2.5
+    times: list = field(default_factory=list)
+    flagged: int = 0
+
+    def record(self, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        if len(hist) < 8:
+            return False
+        med = float(np.median(hist[:-1]))
+        if dt > self.threshold * med:
+            self.flagged += 1
+            return True
+        return False
+
+
+@dataclass
+class RestartManager:
+    ckpt_dir: str
+    save_every: int = 50
+    keep: int = 3
+    max_nan_retries: int = 3
+
+    def resume_or_init(self, init_fn: Callable[[], Any]):
+        """Returns (state_tree, extras, start_step)."""
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return init_fn(), {}, 0
+        like = init_fn()
+        state, extras = restore_checkpoint(self.ckpt_dir, step, like)
+        return state, extras, step
+
+    def run(self, state, start_step: int, n_steps: int,
+            step_fn: Callable[[Any, int], tuple],
+            data_state_fn: Callable[[], dict] = lambda: {},
+            inject_failure_at: Optional[int] = None,
+            log_every: int = 10, log_fn=print):
+        """Drive the loop: state' , metrics = step_fn(state, step).
+
+        metrics must contain "loss".  Returns (state, history).
+        """
+        monitor = StragglerMonitor()
+        history = []
+        nan_retries = 0
+        step = start_step
+        while step < n_steps:
+            if inject_failure_at is not None and step == inject_failure_at:
+                inject_failure_at = None
+                raise SimulatedFailure(step)
+            t0 = time.time()
+            new_state, metrics = step_fn(state, step)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            if not math.isfinite(loss):
+                nan_retries += 1
+                if nan_retries > self.max_nan_retries:
+                    raise RuntimeError(f"non-finite loss at step {step}, "
+                                       f"retries exhausted")
+                last = latest_step(self.ckpt_dir)
+                log_fn(f"[ft] non-finite loss at step {step}; restoring "
+                       f"step {last} and skipping batch")
+                if last is not None:
+                    state, _ = restore_checkpoint(self.ckpt_dir, last, state)
+                step += 1                      # skip the poisoned batch
+                continue
+            nan_retries = 0
+            state = new_state
+            if monitor.record(dt):
+                log_fn(f"[ft] straggler step {step}: {dt:.3f}s "
+                       f"(median ~{np.median(monitor.times[-32:]):.3f}s)")
+            history.append({"step": step, "loss": loss, "time_s": dt})
+            if log_every and step % log_every == 0:
+                log_fn(f"step {step}: loss={loss:.4f} ({dt:.2f}s)")
+            step += 1
+            if self.save_every and step % self.save_every == 0:
+                save_checkpoint(self.ckpt_dir, step, state,
+                                extras=data_state_fn())
+                prune_checkpoints(self.ckpt_dir, self.keep)
+        save_checkpoint(self.ckpt_dir, step, state, extras=data_state_fn())
+        prune_checkpoints(self.ckpt_dir, self.keep)
+        return state, history
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by failure injection; tests catch it and resume."""
+
+    def __init__(self, step):
+        super().__init__(f"simulated preemption at step {step}")
+        self.step = step

@@ -1,0 +1,14 @@
+"""Core of the paper's contribution: fully-asynchronous fully-implicit
+variable-order variable-timestep simulation of networks of detailed neurons.
+
+Numerical accuracy of the BDF integrator requires float64; we enable x64 at
+import time of this subpackage (LM-side code under ``repro.models`` uses
+explicit float32/bfloat16 dtypes everywhere and is unaffected).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.morphology import Morphology, ball_and_stick, branched_tree  # noqa: E402,F401
+from repro.core.cell import CellModel, CellParams  # noqa: E402,F401
+from repro.core.hines import hines_solve, hines_assemble  # noqa: E402,F401

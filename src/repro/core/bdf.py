@@ -1,0 +1,458 @@
+"""Variable-order variable-timestep BDF integrator (CVODE reimplemented in JAX).
+
+This is the paper's fully-implicit solver (§2.3, Eq. 2): the fixed-leading-
+coefficient BDF(1..5) of CVODE [Cohen & Hindmarsh 1996] in Nordsieck form,
+with
+
+  * the l / tq coefficient recurrences of SUNDIALS' cvSetBDF / cvSetTqBDF,
+  * a modified-Newton corrector whose linear solves use the Hines-structured
+    approximate Jacobian M = I - gamma*J~ (NEURON's default preconditioner),
+  * WRMS-norm local error test, eta_{q-1}/eta_q/eta_{q+1} order selection
+    (cvPrepareNextStep / cvAdjust{Increase,Decrease}BDF),
+  * tstop semantics: a step never crosses ``t_limit`` — this is what makes the
+    FAP execution model *non-speculative* (no backstepping ever needed), and
+  * IVP-reset on synaptic discontinuities (order -> 1, fresh h, history
+    discarded) — the cost the paper's event-grouping variants amortise.
+
+Every function is pure and ``vmap``-compatible: a network of neurons is a
+vmapped pytree of ``BDFState`` with *independent* (t, h, q) per neuron — the
+essence of the paper's per-neuron variable stepping.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 5
+LMAX = QMAX + 1           # zn rows: 0..QMAX
+
+# CVODE constants
+ETAMX1 = 1.0e4            # etamax after the very first step
+ETAMX = 10.0              # etamax otherwise
+ETAMIN_EF = 0.1           # min eta after an error-test failure
+ETAMXF = 0.2              # max eta after an error-test failure
+ETACF = 0.25              # eta after a Newton-convergence failure
+THRESH = 1.5              # order/step change threshold
+BIAS1, BIAS2, BIAS3 = 6.0, 6.0, 10.0
+ADDON = 1.0e-6
+NLS_COEF = 0.1
+CRDOWN = 0.3
+RDIV = 2.0
+MAX_NEWTON = 4
+MAX_NCF = 10
+MAX_NEF = 7
+HMIN = 1.0e-9             # ms
+MAX_ATTEMPTS = 40
+
+
+class BDFState(NamedTuple):
+    t: jnp.ndarray            # f64[]
+    h: jnp.ndarray            # f64[] current (scaled-into-zn) step size
+    q: jnp.ndarray            # i32[]
+    zn: jnp.ndarray           # f64[LMAX, n] Nordsieck array
+    tau: jnp.ndarray          # f64[LMAX+1]  tau[1..q(+1)] recent step sizes
+    qwait: jnp.ndarray        # i32[]
+    etamax: jnp.ndarray       # f64[]
+    acor_save: jnp.ndarray    # f64[n] correction of previous step
+    nst: jnp.ndarray          # i32[] accepted steps
+    nfe: jnp.ndarray          # i32[] rhs evaluations
+    nni: jnp.ndarray          # i32[] newton iterations
+    netf: jnp.ndarray         # i32[] error-test failures
+    nncf: jnp.ndarray         # i32[] newton-convergence failures
+    nreset: jnp.ndarray       # i32[] IVP resets (event deliveries)
+    failed: jnp.ndarray       # bool[]
+
+
+class BDFOptions(NamedTuple):
+    atol: float = 1.0e-3
+    rtol: float = 0.0
+    hmax: float = 1.0e9
+    h0: float = -1.0          # <=0: use heuristic
+    precond: str = "neuron"   # "neuron" (paper default) | "schur" (exact HH block)
+
+
+def _wrms(x, y, opts: BDFOptions):
+    w = 1.0 / (opts.rtol * jnp.abs(y) + opts.atol)
+    return jnp.sqrt(jnp.mean((x * w) ** 2))
+
+
+def reinit(model, t, y, iinj, opts: BDFOptions, counters=None) -> BDFState:
+    """(Re-)initialise the IVP at (t, y): order 1, heuristic h0."""
+    f = model.rhs(t, y, iinj)
+    fn = _wrms(f, y, opts)
+    h_heur = 0.5 / (fn + 1.0e-10)
+    h = jnp.where(opts.h0 > 0, opts.h0, jnp.clip(h_heur, 1.0e-6, 1.0))
+    h = jnp.minimum(h, opts.hmax)
+    n = y.shape[0]
+    zn = jnp.zeros((LMAX, n), y.dtype).at[0].set(y).at[1].set(h * f)
+    tau = jnp.zeros((LMAX + 1,), y.dtype).at[1].set(h)
+    z = jnp.zeros((), jnp.int32)
+    c = counters or (z, z + 1, z, z, z, z)
+    return BDFState(t=jnp.asarray(t, y.dtype), h=h, q=jnp.ones((), jnp.int32),
+                    zn=zn, tau=tau, qwait=jnp.full((), 2, jnp.int32),
+                    etamax=jnp.asarray(ETAMX1), acor_save=jnp.zeros_like(y),
+                    nst=c[0], nfe=c[1], nni=c[2], netf=c[3], nncf=c[4],
+                    nreset=c[5], failed=jnp.zeros((), bool))
+
+
+# --------------------------------------------------------------------------
+# coefficient machinery (cvSetBDF / cvSetTqBDF), masked static loops to QMAX
+# --------------------------------------------------------------------------
+def _set_bdf_coeffs(q, h, tau):
+    qf = q.astype(h.dtype)
+    l = jnp.zeros((LMAX,), h.dtype).at[0].set(1.0).at[1].set(1.0)
+    alpha0 = jnp.asarray(-1.0, h.dtype)
+    hsum = h
+    xi_inv = jnp.asarray(1.0, h.dtype)
+    xistar_inv = jnp.asarray(1.0, h.dtype)
+
+    # for (j=2; j < q; j++)
+    for j in range(2, QMAX):
+        active = j < q
+        hsum_n = hsum + tau[j - 1]
+        xi_inv_n = h / hsum_n
+        alpha0_n = alpha0 - 1.0 / j
+        l_n = l.at[1:].add(l[:-1] * xi_inv_n)
+        hsum = jnp.where(active, hsum_n, hsum)
+        alpha0 = jnp.where(active, alpha0_n, alpha0)
+        l = jnp.where(active, l_n, l)
+
+    # j = q  (only when q > 1)
+    active = q > 1
+    alpha0_n = alpha0 - 1.0 / jnp.maximum(qf, 1.0)
+    xistar_inv_n = -l[1] - alpha0_n
+    hsum_n = hsum + tau[jnp.maximum(q - 1, 1)]
+    xi_inv_n = h / hsum_n
+    alpha0_hat_n = -l[1] - xi_inv_n
+    l_n = l.at[1:].add(l[:-1] * xistar_inv_n)
+    alpha0 = jnp.where(active, alpha0_n, alpha0)
+    xistar_inv = jnp.where(active, xistar_inv_n, xistar_inv)
+    hsum = jnp.where(active, hsum_n, hsum)
+    xi_inv = jnp.where(active, xi_inv_n, xi_inv)
+    alpha0_hat = jnp.where(active, alpha0_hat_n, alpha0)
+    l = jnp.where(active, l_n, l)
+
+    # tq coefficients (cvSetTqBDF)
+    A1 = 1.0 - alpha0_hat + alpha0
+    A2 = 1.0 + qf * A1
+    tq2 = jnp.abs(A1 / (alpha0 * A2))
+    lq = l[jnp.clip(q, 0, QMAX)]
+    tq5 = jnp.abs(A2 * xistar_inv / (lq * xi_inv))
+    # order q-1 coefficient
+    Cc = xistar_inv / lq
+    A3 = alpha0 + 1.0 / qf
+    A4 = alpha0_hat + xi_inv
+    Cpinv = (1.0 - A4 + A3) / A3
+    tq1 = jnp.where(q > 1, jnp.abs(Cc * Cpinv), 1.0)
+    # order q+1 coefficient
+    hsum_p = hsum + tau[jnp.clip(q, 1, LMAX)]
+    xi_inv_p = h / hsum_p
+    A5 = alpha0 - 1.0 / (qf + 1.0)
+    A6 = alpha0_hat - xi_inv_p
+    Cppinv = (1.0 - A6 + A5) / A2
+    tq3 = jnp.abs(Cppinv / (xi_inv_p * (qf + 2.0) * A5))
+    tq4 = NLS_COEF / tq2
+    gamma = h / l[1]
+    return l, (tq1, tq2, tq3, tq4, tq5), gamma
+
+
+def _predict(zn, q):
+    """zn <- Pascal(q) zn  (cvPredict)."""
+    for k in range(1, QMAX + 1):
+        for j in range(QMAX, k - 1, -1):
+            upd = zn.at[j - 1].add(zn[j])
+            zn = jnp.where(jnp.logical_and(k <= q, j <= q), upd, zn)
+    return zn
+
+
+def _unpredict(zn, q):
+    """Inverse of _predict (cvRestore)."""
+    for k in range(QMAX, 0, -1):
+        for j in range(k, QMAX + 1):
+            upd = zn.at[j - 1].add(-zn[j])
+            zn = jnp.where(jnp.logical_and(k <= q, j <= q), upd, zn)
+    return zn
+
+
+def _rescale(zn, tau, h, q, eta):
+    fac = eta
+    for j in range(1, LMAX):
+        upd = zn.at[j].multiply(fac)
+        zn = jnp.where(j <= q, upd, zn)
+        fac = fac * eta
+    return zn, h * eta
+
+
+def _increase_order(zn, tau, h, q, acor_save):
+    """cvIncreaseBDF: add one order using the saved correction."""
+    dt = zn.dtype
+    l = jnp.zeros((LMAX,), dt).at[2].set(1.0)
+    alpha0 = jnp.asarray(-1.0, dt)
+    alpha1 = jnp.asarray(1.0, dt)
+    prod = jnp.asarray(1.0, dt)
+    xiold = jnp.asarray(1.0, dt)
+    hsum = h
+    for j in range(1, QMAX):                     # j = 1 .. q-1
+        active = j <= q - 1
+        hsum_n = hsum + tau[j + 1]
+        xi = hsum_n / h
+        prod_n = prod * xi
+        alpha0_n = alpha0 - 1.0 / (j + 1)
+        alpha1_n = alpha1 + 1.0 / xi
+        l_n = l
+        for i in range(QMAX, 1, -1):             # i = j+2 .. 2 descending
+            upd = l_n.at[i].set(l_n[i] * xiold + l_n[i - 1])
+            l_n = jnp.where(i <= j + 2, upd, l_n)
+        hsum = jnp.where(active, hsum_n, hsum)
+        prod = jnp.where(active, prod_n, prod)
+        alpha0 = jnp.where(active, alpha0_n, alpha0)
+        alpha1 = jnp.where(active, alpha1_n, alpha1)
+        l = jnp.where(active, l_n, l)
+        xiold = jnp.where(active, xi, xiold)
+    A1 = (-alpha0 - alpha1) / prod
+    Lrow = jnp.clip(q + 1, 2, QMAX)
+    zn = zn.at[Lrow].set(A1 * acor_save)
+    for j in range(2, QMAX):
+        upd = zn.at[j].add(l[j] * zn[Lrow])
+        zn = jnp.where(jnp.logical_and(j >= 2, j <= q), upd, zn)
+    return zn
+
+
+def _decrease_order(zn, tau, h, q):
+    """cvDecreaseBDF: drop one order."""
+    dt = zn.dtype
+    l = jnp.zeros((LMAX,), dt).at[2].set(1.0)
+    hsum = jnp.zeros((), dt)
+    for j in range(1, QMAX - 1):                 # j = 1 .. q-2
+        active = j <= q - 2
+        hsum_n = hsum + tau[j]
+        xi = hsum_n / h
+        l_n = l
+        for i in range(QMAX, 1, -1):
+            upd = l_n.at[i].set(l_n[i] * xi + l_n[i - 1])
+            l_n = jnp.where(i <= j + 2, upd, l_n)
+        hsum = jnp.where(active, hsum_n, hsum)
+        l = jnp.where(active, l_n, l)
+    qrow = jnp.clip(q, 2, QMAX)
+    for j in range(2, QMAX):
+        upd = zn.at[j].add(-l[j] * zn[qrow])
+        zn = jnp.where(jnp.logical_and(j >= 2, j < q), upd, zn)
+    return zn
+
+
+# --------------------------------------------------------------------------
+# one integration step with retries (cvStep)
+# --------------------------------------------------------------------------
+def step(model, st: BDFState, t_limit, iinj, opts: BDFOptions) -> BDFState:
+    """Advance one accepted BDF step, never crossing t_limit (tstop mode)."""
+    dtype = st.zn.dtype
+    y_ref = st.zn[0]
+
+    def wrms(x, y):
+        return _wrms(x, y, opts)
+
+    def attempt_body(carry):
+        st, ncf, nef, attempts, done = carry
+
+        # ---- tstop / hmax clamp --------------------------------------------
+        room = t_limit - st.t
+        h_goal = jnp.minimum(st.h, jnp.minimum(room, opts.hmax))
+        h_goal = jnp.maximum(h_goal, HMIN)
+        eta0 = h_goal / st.h
+        zn, h = _rescale(st.zn, st.tau, st.h, st.q, eta0)
+        st = st._replace(zn=zn, h=h)
+
+        l, tq, gamma = _set_bdf_coeffs(st.q, st.h, st.tau)
+        tq1, tq2, tq3, tq4, tq5 = tq
+
+        zn_pred = _predict(st.zn, st.q)
+        ypred = zn_pred[0]
+        zdot_term = zn_pred[1] / l[1]            # gamma * ydot_pred
+        t_new = st.t + st.h
+
+        # ---- modified Newton (cvNlsNewton) ---------------------------------
+        def newton_body(c):
+            y, acor, delp, crate, m, conv, div, nni, nfe = c
+            f = model.rhs(t_new, y, iinj)
+            G = acor + zdot_term - gamma * f
+            delta = model.solve_newton_mat(y, gamma, -G, mode=opts.precond)
+            dnrm = wrms(delta, y_ref)
+            y = y + delta
+            acor = acor + delta
+            crate_n = jnp.where(m > 0, jnp.maximum(CRDOWN * crate,
+                                                   dnrm / jnp.maximum(delp, 1e-300)),
+                                crate)
+            dcon = dnrm * jnp.minimum(1.0, crate_n) / tq4
+            conv = dcon < 1.0
+            div = jnp.logical_and(m >= 1, dnrm > RDIV * jnp.maximum(delp, 1e-300))
+            return (y, acor, dnrm, crate_n, m + 1, conv, div, nni + 1, nfe + 1)
+
+        def newton_cond(c):
+            _, _, _, _, m, conv, div, _, _ = c
+            return jnp.logical_and(m < MAX_NEWTON,
+                                   jnp.logical_and(~conv, ~div))
+
+        init = (ypred, jnp.zeros_like(ypred), jnp.zeros((), dtype),
+                jnp.ones((), dtype), jnp.zeros((), jnp.int32),
+                jnp.zeros((), bool), jnp.zeros((), bool), st.nni, st.nfe)
+        y, acor, _, _, _, conv, _, nni, nfe = jax.lax.while_loop(
+            newton_cond, newton_body, init)
+        st = st._replace(nni=nni, nfe=nfe)
+
+        acnrm = wrms(acor, y_ref)
+        dsm = acnrm * tq2
+
+        # ---- outcomes -------------------------------------------------------
+        def on_conv_fail(st, ncf, nef):
+            zn = st.zn                            # zn was never predicted in-place
+            zn, h = _rescale(zn, st.tau, st.h, st.q, jnp.asarray(ETACF, dtype))
+            st = st._replace(zn=zn, h=h, etamax=jnp.asarray(1.0, dtype),
+                             nncf=st.nncf + 1)
+            return st, ncf + 1, nef
+
+        def on_err_fail(st, ncf, nef):
+            Lq = (st.q + 1).astype(dtype)
+            eta = 1.0 / (jnp.power(BIAS2 * dsm, 1.0 / Lq) + ADDON)
+            eta = jnp.clip(eta, ETAMIN_EF, ETAMXF)
+            # after many failures drop to order 1 with small steps
+            force = nef + 1 >= MAX_NEF
+            q = jnp.where(force, jnp.ones((), jnp.int32), st.q)
+            eta = jnp.where(force, jnp.asarray(ETAMIN_EF, dtype), eta)
+            zn, h = _rescale(st.zn, st.tau, st.h, q, eta)
+            # when forcing q=1, rebuild zn[1] from f
+            st = st._replace(zn=zn, h=h, q=q, etamax=jnp.asarray(1.0, dtype),
+                             netf=st.netf + 1)
+            return st, ncf, nef + 1
+
+        def on_accept(st, ncf, nef):
+            # cvCompleteStep
+            q, h = st.q, st.h
+            nst = st.nst + 1
+            tau = st.tau
+            for i in range(LMAX, 1, -1):         # cvCompleteStep: i = q .. 2
+                upd = tau.at[i].set(tau[i - 1])
+                tau = jnp.where(i <= q, upd, tau)
+            tau = jnp.where(jnp.logical_and(q == 1, nst > 1),
+                            tau.at[2].set(tau[1]), tau)
+            tau = tau.at[1].set(h)
+            zn = zn_pred
+            for j in range(LMAX):
+                upd = zn.at[j].add(l[j] * acor)
+                zn = jnp.where(j <= q, upd, zn)
+            qwait = st.qwait - 1
+
+            # ---- order & step selection (cvPrepareNextStep) ----------------
+            Lq = (q + 1).astype(dtype)
+            etaq = 1.0 / (jnp.power(BIAS2 * dsm, 1.0 / Lq) + ADDON)
+
+            do_sel = qwait == 0
+            # eta for order q-1
+            ddn = wrms(zn[jnp.clip(q, 1, QMAX)], y_ref) * tq1
+            etaqm1 = jnp.where(q > 1,
+                               1.0 / (jnp.power(BIAS1 * ddn, 1.0 / q.astype(dtype)) + ADDON),
+                               0.0)
+            # eta for order q+1
+            dup = wrms(acor - st.acor_save, y_ref) * tq3
+            etaqp1 = jnp.where(q < QMAX,
+                               1.0 / (jnp.power(BIAS3 * dup, 1.0 / (Lq + 1.0)) + ADDON),
+                               0.0)
+            etam = jnp.maximum(etaqm1, jnp.maximum(etaq, etaqp1))
+            qprime_sel = jnp.where(etam == etaqm1, q - 1,
+                                   jnp.where(etam == etaq, q, q + 1))
+            eta_sel = jnp.where(etam < THRESH, 1.0, etam)
+            qprime_sel = jnp.where(etam < THRESH, q, qprime_sel)
+
+            eta_noq = jnp.where(etaq < THRESH, 1.0, etaq)
+            eta = jnp.where(do_sel, eta_sel, eta_noq)
+            qprime = jnp.where(do_sel, qprime_sel, q)
+            eta = jnp.minimum(eta, st.etamax)
+            # never exceed hmax
+            eta = eta / jnp.maximum(1.0, eta * h / opts.hmax)
+
+            # apply order change on zn
+            zn_inc = _increase_order(zn, tau, h, q, acor)
+            zn_dec = _decrease_order(zn, tau, h, q)
+            zn = jnp.where(qprime > q, zn_inc, jnp.where(qprime < q, zn_dec, zn))
+            qnew = jnp.clip(qprime, 1, QMAX)
+            zn, hnew = _rescale(zn, tau, h, qnew, eta)
+            qwait = jnp.where(do_sel, qnew + 1, qwait)
+
+            st = st._replace(
+                t=st.t + h, h=hnew, q=qnew, zn=zn, tau=tau, qwait=qwait,
+                etamax=jnp.asarray(ETAMX, dtype), acor_save=acor, nst=nst)
+            return st, ncf, nef
+
+        err_ok = dsm <= 1.0
+        accepted = jnp.logical_and(conv, err_ok)
+
+        st_cf, ncf_cf, nef_cf = on_conv_fail(st, ncf, nef)
+        st_ef, ncf_ef, nef_ef = on_err_fail(st, ncf, nef)
+        st_ok, ncf_ok, nef_ok = on_accept(st, ncf, nef)
+
+        st = jax.tree_util.tree_map(
+            lambda a, b, c: jnp.where(accepted, a, jnp.where(conv, b, c)),
+            st_ok, st_ef, st_cf)
+        ncf = jnp.where(accepted, ncf_ok, jnp.where(conv, ncf_ef, ncf_cf))
+        nef = jnp.where(accepted, nef_ok, jnp.where(conv, nef_ef, nef_cf))
+
+        give_up = jnp.logical_or(ncf >= MAX_NCF,
+                                 jnp.logical_or(nef >= MAX_NEF + 3,
+                                                attempts + 1 >= MAX_ATTEMPTS))
+        st = st._replace(failed=jnp.logical_or(st.failed, give_up))
+        done = jnp.logical_or(accepted, give_up)
+        return st, ncf, nef, attempts + 1, done
+
+    def attempt_cond(carry):
+        _, _, _, _, done = carry
+        return ~done
+
+    z32 = jnp.zeros((), jnp.int32)
+    st, *_ = jax.lax.while_loop(attempt_cond, attempt_body,
+                                (st, z32, z32, z32, jnp.zeros((), bool)))
+    # snap to t_limit when within rounding distance
+    snap = (t_limit - st.t) < 1e-10
+    st = st._replace(t=jnp.where(snap, t_limit, st.t))
+    return st
+
+
+def advance_to(model, st: BDFState, t_target, iinj, opts: BDFOptions,
+               max_steps: int = 100000) -> BDFState:
+    """Step until st.t >= t_target (or failure)."""
+
+    def cond(c):
+        st, k = c
+        return jnp.logical_and(jnp.logical_and(st.t < t_target - 1e-12, ~st.failed),
+                               k < max_steps)
+
+    def body(c):
+        st, k = c
+        return step(model, st, t_target, iinj, opts), k + 1
+
+    st, _ = jax.lax.while_loop(cond, body, (st, jnp.zeros((), jnp.int32)))
+    return st
+
+
+def interpolate(st: BDFState, t_eval):
+    """Evaluate the Nordsieck polynomial at t_eval in [t-h_used, t]."""
+    s = (t_eval - st.t) / st.h
+    y = jnp.zeros_like(st.zn[0])
+    sj = jnp.ones(())
+    for j in range(LMAX):
+        y = y + jnp.where(j <= st.q, sj, 0.0) * st.zn[j]
+        sj = sj * s
+    return y
+
+
+def deliver_event(model, st: BDFState, w_ampa, w_gaba, iinj,
+                  opts: BDFOptions) -> BDFState:
+    """Apply a synaptic discontinuity at the current time and reset the IVP
+    (paper §2.3: discontinuities lead to a reset of the IVP problem and
+    interpolator state history)."""
+    y = model.apply_event(st.zn[0], w_ampa, w_gaba)
+    counters = (st.nst, st.nfe + 1, st.nni, st.netf, st.nncf, st.nreset + 1)
+    new = reinit(model, st.t, y, iinj, opts, counters=counters)
+    new = new._replace(failed=st.failed)
+    return new

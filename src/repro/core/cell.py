@@ -1,0 +1,230 @@
+"""Assembled compartmental neuron model: state packing, RHS, Jacobian terms.
+
+State vector layout for one neuron with C compartments (paper Eq. 1/2):
+
+    y = [ V(0..C) | m(0..C) | h(0..C) | n(0..C) | g_ampa | g_gaba (| ca | rho) ]
+
+Synaptic conductances are aggregate single-exponential states attached to the
+soma (compartment 0); a synaptic *event* is a discontinuity ``g += w`` — the
+IVP reset of paper §2.3.  The optional (ca, rho) pair is the complex
+correlated mechanism that requires fully-implicit resolution (paper §2.2).
+
+``CellModel`` exposes:
+  rhs(t, y, iinj)            full ODE right-hand side  (the CVODE f)
+  jac_terms(y)               the Hines-structured approximation to df/dy used
+                             as the Newton matrix  M = I - gamma*J  (NEURON's
+                             default preconditioner, paper §2.3)
+  solve_newton_mat(y, gamma, b)   solves  (I - gamma*J~) x = b  in O(C)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mechanisms as mech
+from repro.core.hines import hines_assemble, hines_solve
+from repro.core.morphology import Morphology
+
+
+class CellParams(NamedTuple):
+    """Traced per-neuron constants (arrays so networks can be heterogeneous)."""
+
+    parent: jnp.ndarray      # i32[C]
+    area: jnp.ndarray        # f64[C] um^2
+    cap: jnp.ndarray         # f64[C] nF
+    g_axial: jnp.ndarray     # f64[C] uS
+
+
+class CellModel:
+    """Static model description; all methods are jit/vmap friendly."""
+
+    def __init__(self, morph: Morphology, with_plasticity: bool = False):
+        self.morph = morph
+        self.C = morph.n_comp
+        self.with_plasticity = bool(with_plasticity)
+        self.n_syn = 2
+        self.n_extra = 2 if with_plasticity else 0
+        self.n_state = 4 * self.C + self.n_syn + self.n_extra
+        self.params = CellParams(
+            parent=jnp.asarray(morph.parent, jnp.int32),
+            area=jnp.asarray(morph.area),
+            cap=jnp.asarray(morph.cap),
+            g_axial=jnp.asarray(morph.g_axial),
+        )
+
+    # ---- packing -------------------------------------------------------------
+    def split(self, y):
+        C = self.C
+        v = y[:C]
+        m = y[C:2 * C]
+        h = y[2 * C:3 * C]
+        n = y[3 * C:4 * C]
+        g_ampa = y[4 * C]
+        g_gaba = y[4 * C + 1]
+        extra = y[4 * C + 2:]
+        return v, m, h, n, g_ampa, g_gaba, extra
+
+    def pack(self, v, m, h, n, g_ampa, g_gaba, extra=None):
+        parts = [v, m, h, n, jnp.stack([g_ampa, g_gaba])]
+        if self.with_plasticity:
+            parts.append(extra)
+        return jnp.concatenate(parts)
+
+    @property
+    def idx_vsoma(self) -> int:
+        return 0
+
+    @property
+    def idx_g_ampa(self) -> int:
+        return 4 * self.C
+
+    @property
+    def idx_g_gaba(self) -> int:
+        return 4 * self.C + 1
+
+    @property
+    def idx_ca(self) -> int:
+        return 4 * self.C + 2
+
+    def init_state(self, v0: float = -65.0):
+        """Gates at steady state for v0, synapses at zero."""
+        v = jnp.full((self.C,), v0)
+        (m_inf, _), (h_inf, _), (n_inf, _) = mech.gate_inf_tau(v)
+        g0 = jnp.zeros(())
+        extra = jnp.array([0.0, 0.2]) if self.with_plasticity else None
+        return self.pack(v, m_inf, h_inf, n_inf, g0, g0, extra)
+
+    # ---- dynamics --------------------------------------------------------------
+    def _syn_current_soma(self, v_soma, g_ampa, g_gaba):
+        return g_ampa * (v_soma - mech.E_AMPA) + g_gaba * (v_soma - mech.E_GABA)
+
+    def rhs(self, t, y, iinj=0.0):
+        """f(t, y): full right-hand side; iinj = injected soma current (nA)."""
+        del t
+        v, m, h, n, g_ampa, g_gaba, extra = self.split(y)
+        p = self.params
+        i_ion = mech.ionic_current(p.area, v, m, h, n)        # nA, outward
+        # axial tree currents (to-parent coupling, symmetric)
+        dv_num = -i_ion
+        vp = v[p.parent]                                       # parent voltage (junk at root)
+        flow = p.g_axial * (vp - v)                            # nA into i from parent
+        flow = flow.at[0].set(0.0)
+        dv_num = dv_num + flow
+        # each child pushes the opposite flow onto its parent
+        dv_num = dv_num.at[p.parent].add(-flow)
+        i_syn = self._syn_current_soma(v[0], g_ampa, g_gaba)
+        dv_num = dv_num.at[0].add(-i_syn + iinj)
+        dv = dv_num / p.cap
+        dm, dh, dn = mech.gate_derivs(v, m, h, n)
+        dg_a = -g_ampa / mech.TAU_AMPA
+        dg_g = -g_gaba / mech.TAU_GABA
+        if self.with_plasticity:
+            dca, drho = mech.plasticity_derivs(extra[0], extra[1])
+            dextra = jnp.stack([dca, drho])
+        else:
+            dextra = None
+        return self.pack(dv, dm, dh, dn, dg_a, dg_g, dextra)
+
+    # ---- structured Newton matrix (paper §2.3 preconditioner) -------------------
+    def jac_terms(self, y):
+        """Terms of the Hines-structured J~:
+
+        voltage rows:  dVdot/dV ~ -(g_ion_tot + g_axial couplings)/cap  (tree)
+        gate rows:     dxdot/dx = -(alpha+beta)        (diagonal)
+        synapse rows:  -1/tau                          (diagonal)
+        plasticity:    2x2 block treated diagonally via autodiff diag
+        Off-diagonal V<->x couplings are dropped (inexact Newton; NEURON default).
+        """
+        v, m, h, n, g_ampa, g_gaba, extra = self.split(y)
+        g_na, g_k, g_l = mech.channel_conductances(self.params.area, m, h, n)
+        g_tot = g_na + g_k + g_l
+        g_tot = g_tot.at[0].add(g_ampa + g_gaba)
+        r = mech.gate_rates(v)
+        diag_gates = jnp.concatenate([-(r.a_m + r.b_m), -(r.a_h + r.b_h),
+                                      -(r.a_n + r.b_n)])
+        diag_syn = jnp.array([-1.0 / mech.TAU_AMPA, -1.0 / mech.TAU_GABA])
+        if self.with_plasticity:
+            dfun = lambda e: jnp.stack(mech.plasticity_derivs(e[0], e[1]))
+            jdiag = jnp.diagonal(jax.jacfwd(dfun)(extra))
+            diag_extra = jdiag
+        else:
+            diag_extra = jnp.zeros((0,))
+        return g_tot, diag_gates, diag_syn, diag_extra
+
+    def solve_newton_mat(self, y, gamma, b, mode: str = "neuron"):
+        """Solve (I - gamma*J~) x = b with one Hines solve + diagonal solves.
+
+        mode="neuron": NEURON's default preconditioner — V<->gate couplings
+        dropped (paper §2.3).  mode="schur": beyond-paper exact elimination
+        of the HH gate block into the voltage system (the V/gate coupling is
+        local per compartment, so the Schur complement stays Hines-shaped);
+        Newton then converges in fewer iterations near spikes at the cost of
+        one rate-derivative evaluation (EXPERIMENTS.md §Perf, neuro side).
+        """
+        C = self.C
+        g_tot, diag_gates, diag_syn, diag_extra = self.jac_terms(y)
+        p = self.params
+        bv = b[:C] * p.cap / gamma
+        diag_v = p.cap / gamma + g_tot
+
+        if mode == "schur":
+            v, m, h, n, g_ampa, g_gaba, extra = self.split(y)
+            f = mech.S_PER_CM2_TO_US_PER_UM2 * p.area
+            # cap * dVdot/dx = -(dg/dx) (V - E_x)
+            Jvm = -(mech.GNABAR * f * 3.0 * m ** 2 * h) * (v - mech.ENA)
+            Jvh = -(mech.GNABAR * f * m ** 3) * (v - mech.ENA)
+            Jvn = -(mech.GKBAR * f * 4.0 * n ** 3) * (v - mech.EK)
+            # dxdot/dV via one jvp along ones (exact, elementwise)
+            _, (Jmv, Jhv, Jnv) = jax.jvp(
+                lambda vv: mech.gate_derivs(vv, m, h, n), (v,),
+                (jnp.ones_like(v),))
+            dm, dh, dn = (diag_gates[:C], diag_gates[C:2 * C],
+                          diag_gates[2 * C:3 * C])
+            bm, bh, bn = b[C:2 * C], b[2 * C:3 * C], b[3 * C:4 * C]
+            den_m, den_h, den_n = (1.0 - gamma * dm, 1.0 - gamma * dh,
+                                   1.0 - gamma * dn)
+            # Schur diagonal correction and rhs folding
+            diag_v = diag_v - gamma * (Jvm * Jmv / den_m + Jvh * Jhv / den_h
+                                       + Jvn * Jnv / den_n)
+            bv = bv + (Jvm * bm / den_m + Jvh * bh / den_h + Jvn * bn / den_n)
+            # synapse coupling into the soma V row (dg/dt is V-independent,
+            # so this is rhs-only: no diagonal correction)
+            den_ga = 1.0 + gamma / mech.TAU_AMPA
+            den_gb = 1.0 + gamma / mech.TAU_GABA
+            bv = bv.at[0].add(-(v[0] - mech.E_AMPA) * b[self.idx_g_ampa] / den_ga
+                              - (v[0] - mech.E_GABA) * b[self.idx_g_gaba] / den_gb)
+
+        d = hines_assemble(p.parent, p.g_axial, diag_v)
+        xv = hines_solve(p.parent, p.g_axial, d, bv)
+        rest_diag = jnp.concatenate([diag_gates, diag_syn, diag_extra])
+        xr = b[C:] / (1.0 - gamma * rest_diag)
+        if mode == "schur":
+            # back-substitute exact gate corrections
+            gate_corr = jnp.concatenate([
+                gamma * Jmv * xv / den_m, gamma * Jhv * xv / den_h,
+                gamma * Jnv * xv / den_n])
+            xr = xr.at[: 3 * C].add(gate_corr)
+        return jnp.concatenate([xv, xr])
+
+    # ---- events ------------------------------------------------------------------
+    def apply_event(self, y, w_ampa, w_gaba):
+        """Deliver aggregated synaptic weights (the discontinuity)."""
+        y = y.at[self.idx_g_ampa].add(w_ampa)
+        y = y.at[self.idx_g_gaba].add(w_gaba)
+        if self.with_plasticity:
+            y = y.at[self.idx_ca].add(mech.CA_JUMP * (w_ampa > 0))
+        return y
+
+    # ---- dense oracle (tests only) -------------------------------------------------
+    def dense_jacobian(self, t, y, iinj=0.0):
+        return jax.jacfwd(lambda yy: self.rhs(t, yy, iinj))(y)
+
+
+def weighted_rms(x, y, atol, rtol):
+    """CVODE WRMS norm with ewt_i = 1/(rtol*|y_i| + atol)."""
+    w = 1.0 / (rtol * jnp.abs(y) + atol)
+    return jnp.sqrt(jnp.mean((x * w) ** 2))

@@ -1,0 +1,110 @@
+"""Synaptic event queues: fixed-capacity, fully vectorised, SPMD-friendly.
+
+The paper's HPX implementation delivers synaptic *parcels* point-to-point.
+On SPMD hardware (DESIGN.md §3) we realise the same semantics with dense
+per-neuron slot arrays: insertion is a batched scatter, delivery is a masked
+reduction — both single XLA ops, no per-message control flow.
+
+Empty slots hold ``t = +inf``.  Overflow (more pending events than capacity)
+is *detected*, never silent: ``dropped`` accumulates and tests assert zero.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+class EventQueue(NamedTuple):
+    t: jnp.ndarray        # f64[N, Q] delivery times (+inf = free)
+    w_ampa: jnp.ndarray   # f64[N, Q]
+    w_gaba: jnp.ndarray   # f64[N, Q]
+    dropped: jnp.ndarray  # i32[] overflow counter
+
+
+def make_queue(n: int, capacity: int, dtype=jnp.float64) -> EventQueue:
+    return EventQueue(
+        t=jnp.full((n, capacity), INF, dtype),
+        w_ampa=jnp.zeros((n, capacity), dtype),
+        w_gaba=jnp.zeros((n, capacity), dtype),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def insert(eq: EventQueue, target, t_ev, w_ampa, w_gaba, valid) -> EventQueue:
+    """Batched insert of E candidate events; invalid entries are ignored.
+
+    target i32[E]; t_ev/w_ampa/w_gaba f64[E]; valid bool[E].
+    Multiple events may share a target: each gets a distinct free slot via
+    (segment-rank within target) -> (rank-th free slot of that neuron).
+    """
+    n, cap = eq.t.shape
+    E = target.shape[0]
+    tgt = jnp.where(valid, target, n)                       # park invalid at n
+    order = jnp.argsort(tgt, stable=True)
+    tgt_s = tgt[order]
+    # rank of each event within its target segment
+    idx = jnp.arange(E)
+    seg_start = jnp.searchsorted(tgt_s, tgt_s, side="left")
+    rank = idx - seg_start
+    # rank-th free slot per neuron: free slots sorted first
+    free = jnp.isinf(eq.t)                                   # [N, Q]
+    slot_order = jnp.argsort(~free, axis=1, stable=True)     # free first
+    n_free = free.sum(axis=1)
+    tgt_c = jnp.clip(tgt_s, 0, n - 1)
+    ok = jnp.logical_and(tgt_s < n, rank < n_free[tgt_c])
+    slot = slot_order[tgt_c, jnp.clip(rank, 0, cap - 1)]
+    row = jnp.where(ok, tgt_c, n)                            # drop-out-of-range
+    te, wa, wg = t_ev[order], w_ampa[order], w_gaba[order]
+    new_t = eq.t.at[row, slot].set(te, mode="drop")
+    new_a = eq.w_ampa.at[row, slot].set(wa, mode="drop")
+    new_g = eq.w_gaba.at[row, slot].set(wg, mode="drop")
+    dropped = eq.dropped + jnp.sum(jnp.logical_and(tgt_s < n, ~ok)).astype(jnp.int32)
+    return EventQueue(new_t, new_a, new_g, dropped)
+
+
+def next_time(eq: EventQueue):
+    """Earliest pending delivery time per neuron, +inf if none.  f64[N]."""
+    return eq.t.min(axis=1)
+
+
+def deliver_until(eq: EventQueue, t_dl):
+    """Pop all events with t <= t_dl (per neuron); return summed weights.
+
+    t_dl: f64[N].  Returns (eq', w_ampa[N], w_gaba[N], n_delivered[N]).
+    """
+    due = eq.t <= t_dl[:, None]
+    wa = jnp.sum(jnp.where(due, eq.w_ampa, 0.0), axis=1)
+    wg = jnp.sum(jnp.where(due, eq.w_gaba, 0.0), axis=1)
+    cnt = due.sum(axis=1).astype(jnp.int32)
+    new_t = jnp.where(due, INF, eq.t)
+    return EventQueue(new_t, eq.w_ampa, eq.w_gaba, eq.dropped), wa, wg, cnt
+
+
+class SpikeRecord(NamedTuple):
+    """Global spike-train recorder with fixed capacity per neuron."""
+    times: jnp.ndarray    # f64[N, S]
+    count: jnp.ndarray    # i32[N]
+    overflow: jnp.ndarray  # i32[]
+
+
+def make_spike_record(n: int, capacity: int = 128, dtype=jnp.float64) -> SpikeRecord:
+    return SpikeRecord(jnp.full((n, capacity), INF, dtype),
+                       jnp.zeros((n,), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+def record_spikes(rec: SpikeRecord, neuron, t_spike, valid) -> SpikeRecord:
+    """Append spikes (neuron[i], t_spike[i]) for valid[i]."""
+    n, cap = rec.times.shape
+    # at most one spike per neuron per call in our drivers -> slot = count
+    row = jnp.where(valid, neuron, n)
+    slot = rec.count[jnp.clip(neuron, 0, n - 1)]
+    ok = slot < cap
+    row = jnp.where(ok, row, n)
+    times = rec.times.at[row, jnp.clip(slot, 0, cap - 1)].set(t_spike, mode="drop")
+    count = rec.count.at[jnp.where(valid & ok, neuron, n)].add(1, mode="drop")
+    overflow = rec.overflow + jnp.sum(valid & ~ok).astype(jnp.int32)
+    return SpikeRecord(times, count, overflow)

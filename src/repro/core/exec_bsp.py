@@ -1,0 +1,197 @@
+"""Bulk Synchronous Parallel execution models (paper baselines, Fig. 1 a/b).
+
+``run_bsp_fixed``  — fixed-timestep lockstep execution with a communication
+window equal to the minimum synaptic delay (0.1 ms): methods 1a (cnexp),
+1b (euler), 2a (derivimplicit).
+
+``run_bsp_vardt`` — NEURON-style BSP variable-timestep (method 2b): each
+neuron runs its own CVODE/BDF integrator but a collective barrier clamps all
+integrators to the communication-window boundary; spikes are exchanged at the
+barrier.  The window clamp is precisely why variable-step struggles under
+BSP: steps can never grow beyond the global 0.1 ms interval even in quiet
+regimes (paper §4.3).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bdf
+from repro.core import events as ev
+from repro.core import exec_common as xc
+from repro.core.cell import CellModel
+from repro.core.fixed_step import make_stepper
+from repro.core.network import Network
+
+EV_CAP = 64
+SPK_CAP = 256
+
+
+class RunResult(NamedTuple):
+    rec: ev.SpikeRecord
+    n_steps: jnp.ndarray       # total interpolation steps (all neurons)
+    n_events: jnp.ndarray      # delivered events
+    n_resets: jnp.ndarray      # IVP resets (vardt only)
+    dropped: jnp.ndarray       # event-queue overflow (must be 0)
+    failed: jnp.ndarray        # integrator failures (must be 0)
+    y_final: jnp.ndarray       # [N, n_state] (vardt: zn[0])
+
+
+def make_bsp_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
+                          method: str = "cnexp", dt: float = 0.025,
+                          window: float = 0.1, ev_cap: int = EV_CAP):
+    n = net.n
+    dnet = xc.to_device(net)
+    steps_w = max(1, int(round(window / dt)))
+    n_windows = int(math.ceil(t_end / (steps_w * dt)))
+    step = make_stepper(model, method, dt)
+    vstep = jax.vmap(step)
+    iinj = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
+
+    def window_body(carry, w_idx):
+        Y, eq, rec, n_ev = carry
+        t0 = w_idx * (steps_w * dt)
+
+        def step_body(c, j):
+            Y, eq, rec, n_ev = c
+            t_j = t0 + j * dt
+            # deliver all events due by this step boundary (fixed-step grid)
+            eq, wa, wg, cnt = ev.deliver_until(eq, jnp.full((n,), t_j + dt))
+            Y = jax.vmap(model.apply_event)(Y, wa, wg)
+            v_prev = Y[:, model.idx_vsoma]
+            Y = vstep(Y, iinj)
+            v_new = Y[:, model.idx_vsoma]
+            spiked, t_sp = xc.detect_spikes(v_prev, v_new, t_j, t_j + dt)
+            rec = ev.record_spikes(rec, jnp.arange(n), t_sp, spiked)
+            return (Y, eq, rec, n_ev + cnt.sum(dtype=jnp.int32)), (spiked, t_sp)
+
+        (Y, eq, rec, n_ev), (spk, tsp) = jax.lax.scan(
+            step_body, (Y, eq, rec, n_ev), jnp.arange(steps_w))
+        # collective exchange at the window barrier (<=1 spike per 0.1 ms)
+        spiked_w = spk.any(axis=0)
+        t_spike_w = jnp.where(spk, tsp, 0.0).sum(axis=0)
+        tgt, t_ev, wa, wg, valid = xc.fanout(dnet, spiked_w, t_spike_w)
+        eq = ev.insert(eq, tgt, t_ev, wa, wg, valid)
+        return (Y, eq, rec, n_ev), None
+
+    @jax.jit
+    def run():
+        Y = xc.batch_init(model, n)
+        eq = ev.make_queue(n, ev_cap)
+        rec = ev.make_spike_record(n, SPK_CAP)
+        (Y, eq, rec, n_ev), _ = jax.lax.scan(
+            window_body, (Y, eq, rec, jnp.zeros((), jnp.int32)),
+            jnp.arange(n_windows))
+        n_steps = jnp.asarray(n * n_windows * steps_w)
+        z = jnp.zeros((), jnp.int32)
+        return RunResult(rec, n_steps, n_ev, z, eq.dropped,
+                         jnp.zeros((), bool), Y)
+
+    return run
+
+
+def run_bsp_fixed(*args, **kw) -> RunResult:
+    return make_bsp_fixed_runner(*args, **kw)()
+
+
+# ---------------------------------------------------------------------------
+# variable-timestep neuron advance, shared by BSP-vardt and FAP-vardt
+# ---------------------------------------------------------------------------
+def make_vardt_advance(model: CellModel, opts: bdf.BDFOptions,
+                       eg_window: float = 0.0, step_budget: int = 12):
+    """Per-neuron advance to a horizon with exact (or grouped) event delivery.
+
+    Returns fn(st, eq_t, eq_a, eq_g, horizon, active, iinj)
+        -> (st, eq_t, spiked, t_spike, n_deliv, n_resets)
+    designed for vmap over neurons.  Non-speculative: the BDF step is clamped
+    (tstop) at min(horizon, next event time) so no step ever crosses an event.
+    """
+
+    def advance(st: bdf.BDFState, eq_t, eq_a, eq_g, horizon, active, iinj_n):
+        def body(i, c):
+            st, eq_t, spiked, t_sp, nd, nrs = c
+            run = jnp.logical_and(active, st.t < horizon - 1e-12)
+            due = eq_t.min()
+            deliver_now = jnp.logical_and(run, due <= st.t + 1e-12)
+            step_now = jnp.logical_and(run, ~deliver_now)
+
+            # --- grouped delivery at current time -------------------------
+            mask = eq_t <= due + eg_window + 1e-12
+            wa = jnp.sum(jnp.where(mask, eq_a, 0.0))
+            wg = jnp.sum(jnp.where(mask, eq_g, 0.0))
+            st_d = bdf.deliver_event(model, st, wa, wg, iinj_n, opts)
+            eq_t_d = jnp.where(mask, jnp.inf, eq_t)
+
+            # --- one BDF step, clamped at horizon / next event ------------
+            t_lim = jnp.minimum(horizon, due)
+            v_prev = st.zn[0][model.idx_vsoma]
+            t_prev = st.t
+            st_s = bdf.step(model, st, t_lim, iinj_n, opts)
+            sp, tsp = xc.detect_spikes(v_prev, st_s.zn[0][model.idx_vsoma],
+                                       t_prev, st_s.t)
+
+            st = jax.tree_util.tree_map(
+                lambda d, s, o: jnp.where(deliver_now, d,
+                                          jnp.where(step_now, s, o)),
+                st_d, st_s, st)
+            eq_t = jnp.where(deliver_now, eq_t_d, eq_t)
+            new_spike = jnp.logical_and(step_now, sp)
+            spiked = jnp.logical_or(spiked, new_spike)
+            t_sp = jnp.where(new_spike, tsp, t_sp)
+            nd = nd + jnp.where(deliver_now, mask.sum(dtype=jnp.int32), 0)
+            nrs = nrs + jnp.where(deliver_now, 1, 0)
+            return st, eq_t, spiked, t_sp, nd, nrs
+
+        z = jnp.zeros((), jnp.int32)
+        init = (st, eq_t, jnp.zeros((), bool), jnp.zeros(()), z, z)
+        return jax.lax.fori_loop(0, step_budget, body, init)
+
+    return advance
+
+
+def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
+                          opts: bdf.BDFOptions = bdf.BDFOptions(),
+                          eg_window: float = 0.0, window: float = 0.1,
+                          step_budget: int = 8, ev_cap: int = EV_CAP):
+    """Method 2b: CVODE under BSP — barrier at every communication window."""
+    n = net.n
+    dnet = xc.to_device(net)
+    n_windows = int(math.ceil(t_end / window))
+    iinj = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
+    advance = make_vardt_advance(model, opts, eg_window, step_budget)
+    vadvance = jax.vmap(advance)
+
+    def window_body(carry, w_idx):
+        sts, eq, rec, n_ev, n_rs = carry
+        w_end = (w_idx + 1.0) * window
+        horizon = jnp.full((n,), 1.0) * w_end          # global barrier
+        active = jnp.ones((n,), bool)
+        sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
+            sts, eq.t, eq.w_ampa, eq.w_gaba, horizon, active, iinj)
+        eq = eq._replace(t=eq_t)
+        rec = ev.record_spikes(rec, jnp.arange(n), t_sp, spiked)
+        tgt, t_ev, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
+        eq = ev.insert(eq, tgt, t_ev, wa, wg, valid)
+        return (sts, eq, rec, n_ev + nd.sum(dtype=jnp.int32), n_rs + nrs.sum(dtype=jnp.int32)), None
+
+    @jax.jit
+    def run():
+        Y = xc.batch_init(model, n)
+        sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj)
+        eq = ev.make_queue(n, ev_cap)
+        rec = ev.make_spike_record(n, SPK_CAP)
+        (sts, eq, rec, n_ev, n_rs), _ = jax.lax.scan(
+            window_body,
+            (sts, eq, rec, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)),
+            jnp.arange(n_windows))
+        return RunResult(rec, sts.nst.sum(), n_ev, n_rs, eq.dropped,
+                         sts.failed.any(), sts.zn[:, 0])
+
+    return run
+
+
+def run_bsp_vardt(*args, **kw) -> RunResult:
+    return make_bsp_vardt_runner(*args, **kw)()

@@ -1,0 +1,73 @@
+"""Shared pieces of the execution models: spike detection, synaptic fan-out,
+batched state initialisation and device-side network arrays."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.cell import CellModel
+from repro.core.network import Network
+
+SPIKE_THR = -20.0     # mV upward crossing at the soma
+
+
+class DeviceNet(NamedTuple):
+    pre: jnp.ndarray
+    post: jnp.ndarray
+    delay: jnp.ndarray
+    w_ampa: jnp.ndarray
+    w_gaba: jnp.ndarray
+
+
+def to_device(net: Network) -> DeviceNet:
+    return DeviceNet(jnp.asarray(net.pre), jnp.asarray(net.post),
+                     jnp.asarray(net.delay), jnp.asarray(net.w_ampa),
+                     jnp.asarray(net.w_gaba))
+
+
+def batch_init(model: CellModel, n: int, v0: float = -65.0):
+    y = model.init_state(v0)
+    return jnp.tile(y[None, :], (n, 1))
+
+
+def detect_spikes(v_prev, v_new, t_prev, t_new):
+    """Upward threshold crossing; spike time by linear interpolation.
+
+    All inputs broadcastable over neurons. Returns (spiked bool[N], t_spike[N]).
+    """
+    crossed = jnp.logical_and(v_prev <= SPIKE_THR, v_new > SPIKE_THR)
+    frac = (SPIKE_THR - v_prev) / jnp.where(v_new == v_prev, 1.0, v_new - v_prev)
+    t_spike = t_prev + frac * (t_new - t_prev)
+    return crossed, jnp.where(crossed, t_spike, 0.0)
+
+
+def fanout(dnet: DeviceNet, spiked, t_spike):
+    """Edge-parallel synaptic fan-out of one spike per neuron.
+
+    Returns candidate events (target, t_ev, w_ampa, w_gaba, valid), length E.
+    """
+    valid = spiked[dnet.pre]
+    t_ev = t_spike[dnet.pre] + dnet.delay
+    return dnet.post, t_ev, dnet.w_ampa, dnet.w_gaba, valid
+
+
+def horizon_times(dnet: DeviceNet, n: int, t_clock, t_end):
+    """FAP dependency horizon: t_max[i] = min over in-edges (t[pre]+delay).
+
+    This is the SPMD realisation of the paper's stepping-notification map
+    (DESIGN.md §3): a scatter-min over the static edge list.
+    Neurons without in-edges get t_end.
+    """
+    cand = t_clock[dnet.pre] + dnet.delay
+    hor = jnp.full((n,), t_end, t_clock.dtype).at[dnet.post].min(cand)
+    return jnp.minimum(hor, t_end)
+
+
+def spike_rates(rec: ev.SpikeRecord, t_lo: float, t_hi: float):
+    """Per-neuron firing rate (Hz) in a window; times in ms."""
+    m = jnp.logical_and(rec.times >= t_lo, rec.times < t_hi)
+    return m.sum(axis=1) / ((t_hi - t_lo) * 1e-3)

@@ -1,0 +1,172 @@
+"""Fully-Asynchronous Parallel execution models (the paper's contribution).
+
+``make_fap_fixed_runner``  — method 1c: fixed-timestep FAP from the authors'
+previous work [2]: per-neuron clocks advance to the pairwise dependency
+horizon; no global barrier.
+
+``make_fap_vardt_runner`` — method 2c (THIS paper, Fig. 1d / Fig. 4 right):
+non-speculative scheduled variable-timestep stepping.  Each round:
+
+  1. horizon[i] = min over in-edges (t[pre] + delay)   (stepping-notification
+     map; scatter-min over the static edge list — DESIGN.md §3),
+  2. the *earliest neurons step next*: every neuron strictly behind its
+     horizon advances (optionally restricted to the K earliest — the
+     scheduler knob), each by its own variable-order variable-step BDF,
+     clamped at min(horizon, next event) => exhaustive, never speculative,
+  3. spikes fan out as events (t_spike + delay) into destination queues.
+
+Event grouping (eg_window = dt/2 or dt) reproduces the paper's 2c variants.
+
+The conservative-lookahead argument of the paper holds here: delays are
+>= min_delay > 0, so the globally earliest neuron always has
+horizon > t — every round makes progress and no deadlock or backstepping can
+occur.  ``tests/test_property_fap.py`` checks this invariant by construction.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bdf
+from repro.core import events as ev
+from repro.core import exec_common as xc
+from repro.core.cell import CellModel
+from repro.core.exec_bsp import EV_CAP, SPK_CAP, RunResult, make_vardt_advance
+from repro.core.fixed_step import make_stepper
+from repro.core.network import Network
+
+
+def make_fap_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
+                          method: str = "cnexp", dt: float = 0.025,
+                          round_cap_steps: int = 16, ev_cap: int = EV_CAP,
+                          max_rounds: int = 2_000_000):
+    """Fixed-step FAP (method 1c).  Returns a nullary jitted runner."""
+    n = net.n
+    dnet = xc.to_device(net)
+    step = make_stepper(model, method, dt)
+    vstep = jax.vmap(step)
+    iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
+    n_total_steps = int(round(t_end / dt))
+
+    def round_body(carry):
+        Y, k, eq, rec, n_ev, n_st, rounds = carry
+        t_clock = k * dt
+        horizon = xc.horizon_times(dnet, n, t_clock, t_end)
+        # whole fixed steps available below the horizon, capped per round
+        n_adv = jnp.clip(jnp.floor((horizon - t_clock) / dt + 1e-9).astype(jnp.int32),
+                         0, round_cap_steps)
+        spiked_r = jnp.zeros((n,), bool)
+        t_sp_r = jnp.zeros((n,))
+
+        def inner(j, c):
+            Y, k, eq, rec, n_ev, n_st, spiked_r, t_sp_r = c
+            act = j < n_adv
+            t_j = k * dt
+            eq2, wa, wg, cnt = ev.deliver_until(eq, jnp.where(act, t_j + dt, -jnp.inf))
+            Y2 = jax.vmap(model.apply_event)(Y, wa, wg)
+            v_prev = Y2[:, model.idx_vsoma]
+            Y2 = vstep(Y2, iinj_v)
+            sp, tsp = xc.detect_spikes(v_prev, Y2[:, model.idx_vsoma], t_j, t_j + dt)
+            sp = jnp.logical_and(sp, act)
+            Y = jnp.where(act[:, None], Y2, Y)
+            k = jnp.where(act, k + 1, k)
+            spiked_r = jnp.logical_or(spiked_r, sp)
+            t_sp_r = jnp.where(sp, tsp, t_sp_r)
+            rec = ev.record_spikes(rec, jnp.arange(n), tsp, sp)
+            return (Y, k, eq2, rec, n_ev + cnt.sum(dtype=jnp.int32), n_st + act.sum(dtype=jnp.int32), spiked_r, t_sp_r)
+
+        Y, k, eq, rec, n_ev, n_st, spiked_r, t_sp_r = jax.lax.fori_loop(
+            0, round_cap_steps, inner,
+            (Y, k, eq, rec, n_ev, n_st, spiked_r, t_sp_r))
+        tgt, t_evs, wa, wg, valid = xc.fanout(dnet, spiked_r, t_sp_r)
+        eq = ev.insert(eq, tgt, t_evs, wa, wg, valid)
+        return Y, k, eq, rec, n_ev, n_st, rounds + 1
+
+    def cond(carry):
+        _, k, _, _, _, _, rounds = carry
+        return jnp.logical_and((k.min() < n_total_steps), rounds < max_rounds)
+
+    @jax.jit
+    def run():
+        Y = xc.batch_init(model, n)
+        eq = ev.make_queue(n, ev_cap)
+        rec = ev.make_spike_record(n, SPK_CAP)
+        z = jnp.zeros((), jnp.int32)
+        Y, k, eq, rec, n_ev, n_st, rounds = jax.lax.while_loop(
+            cond, round_body, (Y, jnp.zeros((n,), jnp.int32), eq, rec, z, z, z))
+        return RunResult(rec, n_st, n_ev, z, eq.dropped,
+                         jnp.zeros((), bool), Y), rounds
+
+    return run
+
+
+def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
+                          opts: bdf.BDFOptions = bdf.BDFOptions(),
+                          eg_window: float = 0.0, horizon_cap: float = 2.0,
+                          k_select: int = 0, step_budget: int = 12,
+                          ev_cap: int = EV_CAP, max_rounds: int = 1_000_000):
+    """Variable-step FAP (method 2c, the paper's reference method).
+
+    eg_window: 0 -> precise delivery (2c-);  dt/2 or dt -> grouped variants.
+    k_select:  0 -> all runnable neurons advance each round; K>0 restricts to
+               the K earliest (the explicit scheduler of paper §2.4).
+    horizon_cap bounds per-round advancement (ms) so one spike per neuron per
+    round is guaranteed (ISI >> cap at all five regimes).
+    """
+    n = net.n
+    dnet = xc.to_device(net)
+    iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
+    advance = make_vardt_advance(model, opts, eg_window, step_budget)
+    vadvance = jax.vmap(advance)
+
+    def round_body(carry):
+        sts, eq, rec, n_ev, n_rs, rounds = carry
+        t_clock = sts.t
+        horizon = xc.horizon_times(dnet, n, t_clock, t_end)
+        horizon = jnp.minimum(horizon, t_clock + horizon_cap)
+        runnable = t_clock < horizon - 1e-12
+        if k_select > 0:
+            # earliest-neuron-steps-next: keep only the K earliest runnable
+            score = jnp.where(runnable, t_clock, jnp.inf)
+            kth = jnp.sort(score)[min(k_select, n) - 1]
+            runnable = jnp.logical_and(runnable, score <= kth)
+        sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
+            sts, eq.t, eq.w_ampa, eq.w_gaba, horizon, runnable, iinj_v)
+        eq = eq._replace(t=eq_t)
+        rec = ev.record_spikes(rec, jnp.arange(n), t_sp, spiked)
+        tgt, t_evs, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
+        eq = ev.insert(eq, tgt, t_evs, wa, wg, valid)
+        return sts, eq, rec, n_ev + nd.sum(dtype=jnp.int32), n_rs + nrs.sum(dtype=jnp.int32), rounds + 1
+
+    def cond(carry):
+        sts, _, _, _, _, rounds = carry
+        return jnp.logical_and(sts.t.min() < t_end - 1e-9,
+                               jnp.logical_and(rounds < max_rounds,
+                                               ~sts.failed.any()))
+
+    @jax.jit
+    def run():
+        Y = xc.batch_init(model, n)
+        sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj_v)
+        eq = ev.make_queue(n, ev_cap)
+        rec = ev.make_spike_record(n, SPK_CAP)
+        z = jnp.zeros((), jnp.int32)
+        sts, eq, rec, n_ev, n_rs, rounds = jax.lax.while_loop(
+            cond, round_body, (sts, eq, rec, z, z, z))
+        return RunResult(rec, sts.nst.sum(), n_ev, n_rs, eq.dropped,
+                         sts.failed.any(), sts.zn[:, 0]), rounds
+
+    return run
+
+
+def run_fap_fixed(*args, **kw):
+    res, _ = make_fap_fixed_runner(*args, **kw)()
+    return res
+
+
+def run_fap_vardt(*args, **kw):
+    res, _ = make_fap_vardt_runner(*args, **kw)()
+    return res

@@ -1,0 +1,148 @@
+"""Carefully-speculative FAP variable-timestep execution.
+
+The paper's §2.4 found NAIVE speculation (step anywhere, backstep on late
+events) infeasible at scale: reverting *sent* spikes cascades across
+compute nodes.  Its §Discussion proposes, as future work, "a carefully-
+speculative execution model performing speculative stepping while avoiding
+the initiation of cascades".  This module implements that proposal:
+
+  per round:
+    1. advance conservatively to the dependency horizon (identical to
+       exec_fap: non-speculative, spikes fan out immediately),
+    2. SNAPSHOT the validated state, then keep stepping speculatively up to
+       ``spec_window`` ms past the horizon — but HOLD any spike emitted in
+       the speculated span (no event leaves the neuron => nothing to revert
+       on other ranks, ever),
+    3. next round, if an event arrives inside a neuron's speculated span,
+       restore its snapshot (a local, communication-free backstep) and drop
+       its held spike; otherwise the speculation is validated: the clock
+       keeps its head start and the held spike (if its time is now at or
+       below the validated horizon) is emitted normally.
+
+Quiet networks validate nearly all speculation, so effective step lengths
+grow past the min-in-delay horizon bound (the §4.3 limit of the
+non-speculative method); active networks pay only discarded local work.
+Spike trains are bit-identical to the non-speculative method whenever
+speculation is validated, and equal up to integrator tolerance otherwise
+(tests/test_speculative.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bdf
+from repro.core import events as ev
+from repro.core import exec_common as xc
+from repro.core.cell import CellModel
+from repro.core.exec_bsp import EV_CAP, SPK_CAP, RunResult, make_vardt_advance
+from repro.core.network import Network
+
+
+class SpecStats(NamedTuple):
+    hits: jnp.ndarray          # validated speculations
+    backsteps: jnp.ndarray     # discarded speculations (local, no cascade)
+    wasted_steps: jnp.ndarray  # BDF steps thrown away
+    held_spikes: jnp.ndarray   # spikes held then emitted after validation
+
+
+def make_spec_runner(model: CellModel, net: Network, iinj, t_end: float,
+                     opts: bdf.BDFOptions = bdf.BDFOptions(),
+                     horizon_cap: float = 2.0, spec_window: float = 2.0,
+                     step_budget: int = 12, ev_cap: int = EV_CAP,
+                     max_rounds: int = 1_000_000):
+    n = net.n
+    dnet = xc.to_device(net)
+    iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
+    advance = make_vardt_advance(model, opts, 0.0, step_budget)
+    vadvance = jax.vmap(advance)
+
+    def round_body(carry):
+        (sts, snap, spec_on, held_sp, held_t, eq, rec, n_ev, n_rs, stats,
+         rounds) = carry
+        # ---- validation of last round's speculation ----------------------
+        # an event due before the speculated clock invalidates the neuron
+        next_ev = ev.next_time(eq)
+        invalid = jnp.logical_and(spec_on, next_ev < sts.t - 1e-12)
+        valid = jnp.logical_and(spec_on, ~invalid)
+        wasted = jnp.where(invalid, sts.nst - snap.nst, 0).sum(dtype=jnp.int32)
+        sts = jax.tree_util.tree_map(
+            lambda s, z: jnp.where(
+                invalid.reshape((-1,) + (1,) * (s.ndim - 1)), z, s),
+            sts, snap)
+        held_sp = jnp.logical_and(held_sp, ~invalid)   # drop unvalidated spikes
+        stats = SpecStats(
+            hits=stats.hits + valid.sum(dtype=jnp.int32),
+            backsteps=stats.backsteps + invalid.sum(dtype=jnp.int32),
+            wasted_steps=stats.wasted_steps + wasted,
+            held_spikes=stats.held_spikes)
+
+        # ---- conservative phase (identical to exec_fap) -------------------
+        t_clock = sts.t
+        horizon = xc.horizon_times(dnet, n, t_clock, t_end)
+        horizon = jnp.minimum(horizon, t_clock + horizon_cap)
+        runnable = t_clock < horizon - 1e-12
+        sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
+            sts, eq.t, eq.w_ampa, eq.w_gaba, horizon, runnable, iinj_v)
+        eq = eq._replace(t=eq_t)
+        # emit held spikes validated by this round's horizon
+        emit_held = jnp.logical_and(held_sp, held_t <= horizon + 1e-12)
+        stats = stats._replace(
+            held_spikes=stats.held_spikes + emit_held.sum(dtype=jnp.int32))
+        held_sp = jnp.logical_and(held_sp, ~emit_held)
+        all_spiked = jnp.logical_or(spiked, emit_held)
+        all_tsp = jnp.where(emit_held, held_t, t_sp)
+        rec = ev.record_spikes(rec, jnp.arange(n), all_tsp, all_spiked)
+        tgt, t_evs, wa, wg, validm = xc.fanout(dnet, all_spiked, all_tsp)
+        eq = ev.insert(eq, tgt, t_evs, wa, wg, validm)
+
+        # ---- speculative phase (hold spikes; nothing leaves the neuron) ---
+        snap = sts
+        spec_limit = jnp.minimum(horizon + spec_window, t_end)
+        next_ev2 = ev.next_time(eq)
+        can_spec = jnp.logical_and(sts.t < spec_limit - 1e-12,
+                                   next_ev2 > spec_limit)  # no known event due
+        sts2, _, sp2, tsp2, _, _ = vadvance(
+            sts, eq.t, eq.w_ampa, eq.w_gaba, spec_limit, can_spec, iinj_v)
+        # neurons holding an un-emitted spike may not speculate further
+        sp_ok = jnp.logical_and(can_spec, ~held_sp)
+        sts = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(
+                sp_ok.reshape((-1,) + (1,) * (a.ndim - 1)), a, b),
+            sts2, sts)
+        new_held = jnp.logical_and(sp_ok, sp2)
+        held_sp = jnp.logical_or(held_sp, new_held)
+        held_t = jnp.where(new_held, tsp2, held_t)
+        spec_on = sp_ok
+
+        return (sts, snap, spec_on, held_sp, held_t, eq, rec,
+                n_ev + nd.sum(dtype=jnp.int32),
+                n_rs + nrs.sum(dtype=jnp.int32), stats, rounds + 1)
+
+    def cond(carry):
+        sts, snap = carry[0], carry[1]
+        rounds = carry[-1]
+        # progress is measured on the VALIDATED clock (snapshot)
+        return jnp.logical_and(snap.t.min() < t_end - 1e-9,
+                               jnp.logical_and(rounds < max_rounds,
+                                               ~sts.failed.any()))
+
+    @jax.jit
+    def run():
+        Y = xc.batch_init(model, n)
+        sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj_v)
+        eq = ev.make_queue(n, ev_cap)
+        rec = ev.make_spike_record(n, SPK_CAP)
+        z = jnp.zeros((), jnp.int32)
+        stats = SpecStats(z, z, z, z)
+        carry = (sts, sts, jnp.zeros((n,), bool), jnp.zeros((n,), bool),
+                 jnp.zeros((n,)), eq, rec, z, z, stats, z)
+        (sts, snap, _, _, _, eq, rec, n_ev, n_rs, stats, rounds) = \
+            jax.lax.while_loop(cond, round_body, carry)
+        res = RunResult(rec, snap.nst.sum(), n_ev, n_rs, eq.dropped,
+                        sts.failed.any(), snap.zn[:, 0])
+        return res, stats, rounds
+
+    return run

@@ -1,0 +1,71 @@
+"""Hines solve of the quasi-tridiagonal compartmental-tree system (pure jnp).
+
+The membrane system for one neuron is ``(D - A) v = b`` where D is diagonal
+and A couples each compartment i to parent[i] with symmetric off-diagonal
+value ``-g_axial[i]``.  With Hines ordering (parent[i] < i) it is solved
+exactly in O(C): one child->parent elimination sweep and one parent->child
+substitution sweep.
+
+This module is the **reference implementation** (also ``kernels/hines/ref.py``
+semantics); the TPU Pallas kernel lives in ``repro.kernels.hines``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hines_assemble(parent, g_axial, diag_extra):
+    """Diagonal of the tree matrix: diag_extra[i] + g_ax[i] + sum_children g_ax[c].
+
+    ``diag_extra`` carries the capacitive + ionic terms (c/dt + g_ion etc.).
+    """
+    d = diag_extra + g_axial
+    # add each child's axial conductance onto its parent's diagonal.
+    # parent[0] == -1 writes g_axial[0] == 0 onto the last row: a no-op by
+    # construction (the root has no to-parent conductance).
+    contrib = jnp.zeros_like(d).at[parent].add(g_axial)
+    return d + contrib
+
+
+def hines_solve(parent, g_axial, d, b):
+    """Solve the Hines-ordered tree system; returns v with (D-A)v = b.
+
+    parent: int32[C] (parent[0] == -1), g_axial: f64[C] (to-parent conductance),
+    d: f64[C] assembled diagonal, b: f64[C] right-hand side.
+    """
+    C = d.shape[0]
+
+    def elim(i, carry):
+        dd, bb = carry
+        idx = C - 1 - i                       # C-1 .. 1
+        p = parent[idx]
+        f = g_axial[idx] / dd[idx]
+        dd = dd.at[p].add(-f * g_axial[idx])
+        bb = bb.at[p].add(f * bb[idx])
+        return dd, bb
+
+    d, b = jax.lax.fori_loop(0, C - 1, elim, (d, b))
+
+    v0 = b[0] / d[0]
+    v = jnp.zeros_like(b).at[0].set(v0)
+
+    def subst(i, v):
+        p = parent[i]
+        vi = (b[i] + g_axial[i] * v[p]) / d[i]
+        return v.at[i].set(vi)
+
+    v = jax.lax.fori_loop(1, C, subst, v)
+    return v
+
+
+def dense_tree_matrix(parent, g_axial, diag_extra):
+    """Materialise the full dense matrix (test oracle only)."""
+    C = diag_extra.shape[0]
+    d = hines_assemble(parent, g_axial, diag_extra)
+    mat = jnp.diag(d)
+    rows = jnp.arange(1, C)
+    cols = parent[1:]
+    mat = mat.at[rows, cols].add(-g_axial[1:])
+    mat = mat.at[cols, rows].add(-g_axial[1:])
+    return mat

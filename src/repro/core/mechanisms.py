@@ -1,0 +1,139 @@
+"""Membrane mechanisms: Hodgkin-Huxley channels, exponential synapses and a
+complex (non-linear, correlated) plasticity mechanism.
+
+The channel set is the HH formalism of paper Eq. 1 (Na: m^3 h, K: n^4, leak).
+The *complex model* is a Graupner-Brunel-style calcium/efficacy pair with a
+cubic ODE and correlated states (paper §2.2, refs [12,13]) — the case that
+motivates a fully-implicit (non-staggered) solver: it cannot be solved by the
+staggered linear-equation trick of simple models.
+
+All rate functions are written with singularity-safe ``exprel`` so they are
+differentiable everywhere (needed by the dense-Jacobian test oracle).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# --- channel densities / reversal potentials (squid-axon HH, NEURON defaults) ---
+GNABAR = 0.12      # S/cm^2
+GKBAR = 0.036      # S/cm^2
+GLBAR = 0.0003     # S/cm^2
+ENA = 50.0         # mV
+EK = -77.0         # mV
+EL = -54.3         # mV
+E_AMPA = 0.0       # mV
+E_GABA = -80.0     # mV
+TAU_AMPA = 2.0     # ms (single-exponential decay conductance)
+TAU_GABA = 8.0     # ms
+
+# S/cm^2 * um^2 -> uS : 1 um^2 = 1e-8 cm^2, 1 S = 1e6 uS  => factor 1e-2
+S_PER_CM2_TO_US_PER_UM2 = 1e-2
+
+
+def exprel(x):
+    """x / (exp(x) - 1), singularity-safe (-> 1 at x=0)."""
+    x_safe = jnp.where(jnp.abs(x) < 1e-9, 1e-9, x)
+    out = x_safe / jnp.expm1(x_safe)
+    return jnp.where(jnp.abs(x) < 1e-9, 1.0 - x / 2.0, out)
+
+
+# --- HH gating rates (V in mV, rates in 1/ms) ---------------------------------
+def alpha_m(v):
+    return 1.0 * exprel(-(v + 40.0) / 10.0)
+
+
+def beta_m(v):
+    return 4.0 * jnp.exp(-(v + 65.0) / 18.0)
+
+
+def alpha_h(v):
+    return 0.07 * jnp.exp(-(v + 65.0) / 20.0)
+
+
+def beta_h(v):
+    return 1.0 / (1.0 + jnp.exp(-(v + 35.0) / 10.0))
+
+
+def alpha_n(v):
+    return 0.1 * exprel(-(v + 55.0) / 10.0)
+
+
+def beta_n(v):
+    return 0.125 * jnp.exp(-(v + 65.0) / 80.0)
+
+
+class GateRates(NamedTuple):
+    a_m: jnp.ndarray
+    b_m: jnp.ndarray
+    a_h: jnp.ndarray
+    b_h: jnp.ndarray
+    a_n: jnp.ndarray
+    b_n: jnp.ndarray
+
+
+def gate_rates(v) -> GateRates:
+    return GateRates(alpha_m(v), beta_m(v), alpha_h(v), beta_h(v),
+                     alpha_n(v), beta_n(v))
+
+
+def gate_inf_tau(v):
+    """Steady state and time constant per gate: x_inf = a/(a+b), tau = 1/(a+b)."""
+    r = gate_rates(v)
+    s_m, s_h, s_n = r.a_m + r.b_m, r.a_h + r.b_h, r.a_n + r.b_n
+    return ((r.a_m / s_m, 1.0 / s_m), (r.a_h / s_h, 1.0 / s_h),
+            (r.a_n / s_n, 1.0 / s_n))
+
+
+def gate_derivs(v, m, h, n):
+    """dx/dt = alpha(V)(1-x) - beta(V)x for the three HH gates."""
+    r = gate_rates(v)
+    dm = r.a_m * (1.0 - m) - r.b_m * m
+    dh = r.a_h * (1.0 - h) - r.b_h * h
+    dn = r.a_n * (1.0 - n) - r.b_n * n
+    return dm, dh, dn
+
+
+def channel_conductances(area, m, h, n):
+    """Per-compartment ionic conductances in uS: (g_na, g_k, g_l)."""
+    f = area * S_PER_CM2_TO_US_PER_UM2
+    g_na = GNABAR * f * m ** 3 * h
+    g_k = GKBAR * f * n ** 4
+    g_l = GLBAR * f * jnp.ones_like(m)
+    return g_na, g_k, g_l
+
+
+def ionic_current(area, v, m, h, n):
+    """Total ionic membrane current per compartment, nA (positive = outward)."""
+    g_na, g_k, g_l = channel_conductances(area, m, h, n)
+    return g_na * (v - ENA) + g_k * (v - EK) + g_l * (v - EL)
+
+
+# --- complex correlated mechanism (Graupner-Brunel-like, paper §2.2) ----------
+RHO_STAR = 0.5
+TAU_RHO = 150.0    # ms
+TAU_CA = 20.0      # ms
+GAMMA_P = 0.6
+GAMMA_D = 0.3
+THETA_P = 1.3
+THETA_D = 1.0
+CA_JUMP = 0.7      # calcium influx per presynaptic event
+
+
+def _sig(x, k=20.0):
+    return 1.0 / (1.0 + jnp.exp(-k * x))
+
+
+def plasticity_derivs(ca, rho):
+    """Correlated non-linear pair: cubic efficacy ODE driven by calcium.
+
+    d ca/dt = -ca / TAU_CA                       (+ CA_JUMP per synaptic event)
+    d rho/dt = (-rho(1-rho)(RHO*-rho) + GAMMA_P(1-rho)sig(ca-THETA_P)
+                - GAMMA_D rho sig(ca-THETA_D)) / TAU_RHO
+    """
+    dca = -ca / TAU_CA
+    drho = (-rho * (1.0 - rho) * (RHO_STAR - rho)
+            + GAMMA_P * (1.0 - rho) * _sig(ca - THETA_P)
+            - GAMMA_D * rho * _sig(ca - THETA_D)) / TAU_RHO
+    return dca, drho

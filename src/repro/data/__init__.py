@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataPipeline, make_batch  # noqa: F401

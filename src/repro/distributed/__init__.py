@@ -1,0 +1,4 @@
+"""Distribution layer: mesh-aware sharding rules (FSDP/TP/SP/EP), activation
+sharding constraints, and the SPMD FAP simulation round for the paper's own
+workload."""
+from repro.distributed.ctx import sharding_ctx, constrain  # noqa: F401

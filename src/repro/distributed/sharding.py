@@ -1,0 +1,174 @@
+"""Named-sharding rules for every parameter / activation in the framework.
+
+Scheme (DESIGN.md §6):
+  * TP  — attention/FFN output features, MoE expert dim, vocab over ``model``
+  * FSDP — the complementary feature dim over ('pod','data') (ZeRO-3;
+    optimizer state shards identically)
+  * SP  — residual-stream sequence dim over ``model`` between layers
+  * batch — over ('pod','data')
+  * decode KV caches — sequence dim over ``model`` (kv-head counts are not
+    generally divisible by the TP degree; sequence always is)
+
+Rules are name-based over the parameter tree; anything unmatched replicates
+(and is asserted to be small).  jax.jit tolerates non-divisible dims by
+padding, so e.g. vocab=151655 shards fine over 16.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+# parameter-name classes
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "cm_k", "w_in", "w1",
+        "w_lora_a", "wr", "wg", "cm_r"}          # [d_in, d_out]: shard d_out
+_ROW = {"wo", "w_down", "cm_v", "w2", "w_out", "w_lora_b", "wv_rwkv"}
+_EMB = {"emb", "enc_pos"}
+_MOE_COL = {"w_gate", "w_up"}                     # under "moe": [E, d, ff]
+_MOE_ROW = {"w_down"}                             # under "moe": [E, ff, d]
+_REPL_SMALL = {"ln1", "ln2", "ln", "lnx", "ln_f", "ln_x", "ln_y", "b1", "b2",
+               "bx", "bn_f", "bq", "bk", "bv", "conv_b", "A_log", "D",
+               "dt_bias", "w_bias", "bonus_u", "mu_r", "mu_k", "mu_v", "mu_w",
+               "mu_g", "mu_ck", "mu_cr", "router", "conv_w", "patch_proj"}
+
+
+def mesh_axes(mesh) -> Tuple[tuple, str]:
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return dp, "model"
+
+
+def _leaf_spec(path, leaf, dp, tp):
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    in_moe = "moe" in names
+    stacked = any(n in ("layers", "dec", "enc") for n in names)
+    nd = leaf.ndim
+    pre = (None,) if stacked else ()
+
+    def spec(*dims):
+        full = pre + dims
+        if len(full) != nd:
+            return P()                            # fallback: replicate
+        return P(*full)
+
+    if in_moe and name in _MOE_COL:
+        return spec(tp, dp, None)
+    if in_moe and name in _MOE_ROW:
+        return spec(tp, None, dp)
+    if name == "router":
+        return spec(dp, None)
+    if name in _EMB:
+        return P(tp, dp)
+    if name in _COL:
+        return spec(dp, tp)
+    if name in _ROW:
+        return spec(tp, dp)
+    if name in ("wq", "wk", "wv", "wo"):
+        return spec(dp, tp)
+    return P()                                     # norms, biases, scalars
+
+
+def param_specs(cfg: ArchConfig, params_tree, mesh):
+    """PartitionSpec tree matching a params (or grads/adam-moment) tree.
+
+    ``params_tree`` may be real arrays or ShapeDtypeStructs.
+    """
+    dp, tp = mesh_axes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, dp, tp), params_tree)
+
+
+def opt_specs(cfg: ArchConfig, opt_state, mesh):
+    """AdamWState(step, mu, nu): moments shard like params."""
+    from repro.optim import AdamWState
+    return AdamWState(step=P(),
+                      mu=param_specs(cfg, opt_state.mu, mesh),
+                      nu=param_specs(cfg, opt_state.nu, mesh))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Input shardings for a train/prefill batch dict."""
+    dp, tp = mesh_axes(mesh)
+    specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.family == "audio":
+        specs["frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        specs["patches"] = P(dp, None, None)
+    return specs
+
+
+def decode_state_specs(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Shardings for the decode cache / recurrent state."""
+    dp, tp = mesh_axes(mesh)
+    ndp = int(np.prod([mesh.shape[a] for a in dp]))
+    bdim = dp if shape.global_batch >= ndp else None   # tiny batches replicate
+    if cfg.family in ("dense", "vlm", "moe"):
+        # [L, B, S, Hkv, hd]: sequence over model (SP decode)
+        kv = P(None, bdim, tp, None, None)
+        return {"k": kv, "v": kv}
+    if cfg.family == "ssm":
+        return {
+            "tm_x": P(None, bdim, tp),
+            "cm_x": P(None, bdim, tp),
+            "S": P(None, bdim, tp, None, None),
+        }
+    if cfg.family == "hybrid":
+        kv = P(None, bdim, tp, None, None)
+        return {
+            "conv": P(None, bdim, None, tp),
+            "h": P(None, bdim, tp, None, None),
+            "k": kv, "v": kv,
+        }
+    if cfg.family == "audio":
+        kv = P(None, bdim, tp, None, None)
+        return {"k": kv, "v": kv,
+                "ek": P(None, bdim, None, None, None),
+                "ev": P(None, bdim, None, None, None)}
+    raise ValueError(cfg.family)
+
+
+def token_spec(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    dp, _ = mesh_axes(mesh)
+    ndp = int(np.prod([mesh.shape[a] for a in dp]))
+    bdim = dp if shape.global_batch >= ndp else None
+    return P(bdim, None)
+
+
+def _fit_one(spec: P, shape, mesh) -> P:
+    """Drop axis assignments whose size does not divide the dim (jit
+    in_shardings require exact divisibility; e.g. vocab=151655 vs 16)."""
+    if len(spec) > len(shape):
+        return P()
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        prod = 1
+        for a in axes:
+            if dim % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def fit_specs(spec_tree, sds_tree, mesh):
+    """Apply _fit_one leafwise: spec_tree parallel to sds_tree."""
+    return jax.tree_util.tree_map(
+        lambda s, leaf: _fit_one(s, leaf.shape, mesh),
+        spec_tree, sds_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(tree_of_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Layout: one subpackage per kernel with
+  <name>.py  - pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py     - jit'd public wrapper (auto interpret-mode off-TPU)
+  ref.py     - pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  hines     - batched Hines tree-tridiagonal solve (the per-Newton-iteration
+              linear solve; NEURON's core numeric kernel)
+  hh_rhs    - fused HH gating-rate + ionic-current evaluation (the CVODE f)
+  attention - flash attention (causal/GQA) for the LM architecture zoo
+"""
+
+import jax
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode everywhere except on real TPU."""
+    return jax.default_backend() != "tpu"

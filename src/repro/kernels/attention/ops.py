@@ -1,0 +1,34 @@
+"""Public jit'd wrapper for flash attention (pads seq dims to block size)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import use_interpret
+from repro.kernels.attention.flash import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128, bk: int = 128):
+    """q: [B, H, Sq, D]; k, v: [B, Hkv, Skv, D] -> [B, H, Sq, D].
+
+    Pads Sq/Skv up to block multiples; padded kv columns sit in the causal
+    future (appended at the end) so they never contribute.
+    """
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    bq_eff = min(bq, max(Sq, 1))
+    bk_eff = min(bk, max(Skv, 1))
+    pq = (-Sq) % bq_eff
+    pk = (-Skv) % bk_eff
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=bq_eff, bk=bk_eff,
+                                 offset=Skv - Sq, kv_len=Skv,
+                                 interpret=use_interpret())
+    return out[:, :, :Sq]

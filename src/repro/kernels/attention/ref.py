@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention (causal GQA, q_len <= kv_len)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: [B, H, Sq, D]; k, v: [B, Hkv, Skv, D] -> [B, H, Sq, D]."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = H // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (D ** 0.5)
+    if causal:
+        offset = Skv - Sq
+        rows = jnp.arange(Sq)[:, None] + offset
+        cols = jnp.arange(Skv)[None, :]
+        s = jnp.where(cols <= rows, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,24 @@
+"""Public jit'd wrapper for the fused HH RHS Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import use_interpret
+from repro.kernels.hh_rhs.hh_rhs import BN_DEFAULT, hh_rhs_pallas
+
+
+@partial(jax.jit, static_argnames=("block_n",))
+def hh_rhs_batched(area, v, m, h, n, block_n: int = BN_DEFAULT):
+    """Fused RHS with automatic batch padding. v,m,h,n: [N, C]."""
+    N, C = v.shape
+    n_pad = (-N) % block_n
+    if n_pad:
+        pad = lambda x, c: jnp.concatenate(
+            [x, jnp.full((n_pad, C), c, x.dtype)], axis=0)
+        v, m, h, n = pad(v, -65.0), pad(m, 0.5), pad(h, 0.5), pad(n, 0.5)
+    outs = hh_rhs_pallas(area, v, m, h, n, block_n=block_n,
+                         interpret=use_interpret())
+    return tuple(o[:N] for o in outs)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: batched Hines tree-tridiagonal solve.
+
+TPU adaptation (DESIGN.md §3): the GPU/CPU formulation walks one neuron's
+tree serially.  On TPU we transpose the problem — the *batch* of neurons
+lies along the 128-wide lane dimension and the compartment index along
+sublanes, so every elimination/substitution step is a full-width VPU
+operation over ``BN`` neurons at once.  All neurons in a block share one
+topology (networks are built from morphology classes), so ``parent`` is a
+scalar (SMEM) array driving dynamic sublane indexing.
+
+Layout:  d, b, out x : [C, BN]  (compartments x neurons), g_axial: [C],
+parent: int32[C].  VMEM footprint per block = 3 * C * BN * 4B (+2 vectors);
+with C = 64, BN = 256 that is ~196 KiB — comfortably inside the ~16 MiB
+v5e VMEM while keeping lanes full (BN multiple of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN_DEFAULT = 256          # neurons per block (lane multiples)
+
+
+def _hines_kernel(parent_ref, gax_ref, d_ref, b_ref, x_ref, *, n_comp):
+    C = n_comp
+    idx_t = jnp.arange(1).dtype      # platform default int (int32 on TPU)
+
+    def load_row(ref, i):
+        return pl.load(ref, (pl.dslice(i, 1), slice(None)))      # [1, BN]
+
+    def store_row(ref, i, val):
+        pl.store(ref, (pl.dslice(i, 1), slice(None)), val)
+
+    # copy inputs into the output buffers we mutate in place
+    x_ref[...] = b_ref[...]
+    dwork = d_ref[...]
+
+    # --- backward (child -> parent) elimination --------------------------
+    def elim(idx, dwork):
+        i = (C - 1 - idx).astype(idx_t)                           # C-1 .. 1
+        p = parent_ref[i].astype(idx_t)
+        a_i = gax_ref[i]
+        d_i = jax.lax.dynamic_slice_in_dim(dwork, i, 1, axis=0)
+        b_i = load_row(x_ref, i)
+        f = a_i / d_i
+        d_p = jax.lax.dynamic_slice_in_dim(dwork, p, 1, axis=0)
+        b_p = load_row(x_ref, p)
+        dwork = jax.lax.dynamic_update_slice_in_dim(dwork, d_p - f * a_i, p, axis=0)
+        store_row(x_ref, p, b_p + f * b_i)
+        return dwork
+
+    dwork = jax.lax.fori_loop(0, C - 1, elim, dwork)
+
+    # --- forward (parent -> child) substitution ---------------------------
+    root = load_row(x_ref, 0) / jax.lax.dynamic_slice_in_dim(dwork, 0, 1, axis=0)
+    store_row(x_ref, 0, root)
+
+    def subst(i, _):
+        i = i.astype(idx_t)
+        p = parent_ref[i].astype(idx_t)
+        a_i = gax_ref[i]
+        d_i = jax.lax.dynamic_slice_in_dim(dwork, i, 1, axis=0)
+        v = (load_row(x_ref, i) + a_i * load_row(x_ref, p)) / d_i
+        store_row(x_ref, i, v)
+        return 0
+
+    jax.lax.fori_loop(1, C, subst, 0)
+
+
+def hines_solve_pallas(parent, g_axial, d, b, *, block_n: int = BN_DEFAULT,
+                       interpret: bool = True):
+    """Solve the batched tree system.  d, b: [C, N] -> x: [C, N].
+
+    parent: int32[C] shared topology; g_axial: [C] (same dtype as d).
+    N must be a multiple of block_n (wrappers pad).
+    """
+    C, N = d.shape
+    assert N % block_n == 0, (N, block_n)
+    grid = (N // block_n,)
+    kernel = functools.partial(_hines_kernel, n_comp=C)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C,), lambda i: (0,)),                  # parent
+            pl.BlockSpec((C,), lambda i: (0,)),                  # g_axial
+            pl.BlockSpec((C, block_n), lambda i: (0, i)),        # d
+            pl.BlockSpec((C, block_n), lambda i: (0, i)),        # b
+        ],
+        out_specs=pl.BlockSpec((C, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((C, N), d.dtype),
+        interpret=interpret,
+    )(parent, g_axial, d, b)

@@ -1,0 +1,27 @@
+"""Public jit'd wrapper for the batched Hines solve Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import use_interpret
+from repro.kernels.hines.hines import BN_DEFAULT, hines_solve_pallas
+
+
+@partial(jax.jit, static_argnames=("block_n",))
+def hines_solve_batched(parent, g_axial, d, b, block_n: int = BN_DEFAULT):
+    """Batched tree solve with automatic padding to the lane block size.
+
+    parent: i32[C]; g_axial: [C]; d, b: [C, N] -> x: [C, N].
+    Padding columns use the identity system (d=1, b=0) so they are inert.
+    """
+    C, N = d.shape
+    n_pad = (-N) % block_n
+    if n_pad:
+        d = jnp.concatenate([d, jnp.ones((C, n_pad), d.dtype)], axis=1)
+        b = jnp.concatenate([b, jnp.zeros((C, n_pad), b.dtype)], axis=1)
+    x = hines_solve_pallas(parent, g_axial.astype(d.dtype), d, b,
+                           block_n=block_n, interpret=use_interpret())
+    return x[:, :N]

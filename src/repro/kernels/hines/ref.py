@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the batched Hines solve kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hines import hines_solve
+
+
+def hines_solve_ref(parent, g_axial, d, b):
+    """d, b: [C, N] -> x: [C, N]; vmap of the O(C) reference solver."""
+    sol = jax.vmap(lambda dd, bb: hines_solve(parent, g_axial, dd, bb),
+                   in_axes=(1, 1), out_axes=1)
+    return sol(d, b)
+
+
+def dense_solve_ref(parent, g_axial, d, b):
+    """Dense linear-algebra oracle (builds the full matrix per column)."""
+    from repro.core.hines import dense_tree_matrix
+    C, N = d.shape
+
+    def one(dd, bb):
+        # dd is the *assembled* diagonal here; rebuild the matrix directly
+        mat = jnp.diag(dd)
+        rows = jnp.arange(1, C)
+        cols = parent[1:]
+        mat = mat.at[rows, cols].add(-g_axial[1:])
+        mat = mat.at[cols, rows].add(-g_axial[1:])
+        return jnp.linalg.solve(mat, bb)
+
+    return jax.vmap(one, in_axes=(1, 1), out_axes=1)(d, b)

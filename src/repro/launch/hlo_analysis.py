@@ -1,0 +1,177 @@
+"""Post-SPMD HLO analysis: per-device collective bytes with while-loop
+trip-count awareness.
+
+``compiled.cost_analysis()`` visits a while body ONCE (verified empirically),
+and collective ops do not appear in ``cost_analysis`` at all.  We therefore
+parse ``compiled.as_text()``:
+
+  1. split the module into named computations,
+  2. sum result-shape bytes of every all-gather / all-reduce / reduce-scatter
+     / all-to-all / collective-permute per computation,
+  3. build the call graph (while body/condition, calls, fusions) and
+     propagate multiplicity: a while's body multiplies by its trip count,
+     extracted from the loop-bound constant in its condition computation
+     (XLA emits ``compare(counter, constant(N))`` for lax.scan loops),
+  4. total per-device collective bytes = sum over reachable computations.
+
+The same machinery reports trip-count-corrected FLOPs for dot ops (used to
+cross-check the L1/L2 compile-delta method in dryrun.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations)=\{?%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo_text: str) -> Dict[str, list]:
+    """Split HLO text into {computation_name: [instruction lines]}."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and ("->" in line) and ("{" in line):
+            m = _COMP_START.match(line.replace("ENTRY ", "").strip())
+            name = None
+            m2 = re.match(r"^(?:ENTRY\s+)?%?([^\s(]+)", line.strip())
+            if m2:
+                name = m2.group(1).lstrip("%")
+            cur = name
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                comps["__entry__"] = comps[cur]
+        elif cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+_COLL_RE = re.compile(
+    r"=\s*([^=]*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?(?:\.\d+)?\(")
+
+
+def _collective_bytes_of(lines) -> int:
+    total = 0
+    for ln in lines:
+        m = _COLL_RE.search(ln)
+        if m and not ln.lstrip().startswith("ROOT tuple"):
+            # avoid double counting start/done pairs: count only *-start or plain
+            if "-done" in ln.split("(")[0]:
+                continue
+            total += _shape_bytes(m.group(1))
+    return total
+
+
+def _while_info(lines) -> list:
+    """[(body, condition)] for while instructions in a computation."""
+    out = []
+    for ln in lines:
+        if " while(" in ln:
+            body = re.search(r"body=%?([\w\.\-]+)", ln)
+            cond = re.search(r"condition=%?([\w\.\-]+)", ln)
+            if body and cond:
+                out.append((body.group(1), cond.group(1)))
+    return out
+
+
+def _calls(lines) -> list:
+    out = []
+    for ln in lines:
+        for m in _CALLED_RE.finditer(ln):
+            out.append(m.group(1))
+    return out
+
+
+def _trip_count(cond_lines) -> int:
+    """Loop bound from the largest integer constant in the condition."""
+    best = 1
+    for ln in cond_lines:
+        for m in _CONST_RE.finditer(ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, dict]:
+    """Trip-count-aware per-device collective bytes of a compiled module."""
+    comps = parse_computations(hlo_text)
+    entry_name = None
+    for ln in hlo_text.splitlines():
+        if ln.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([^\s(]+)", ln)
+            if m:
+                entry_name = m.group(1).rstrip("{").strip()
+            break
+    if entry_name not in comps:
+        entry_name = "__entry__" if "__entry__" in comps else next(iter(comps))
+
+    local = {name: _collective_bytes_of(lines) for name, lines in comps.items()}
+    memo: Dict[str, int] = {}
+
+    def total_of(name: str, depth=0) -> int:
+        if name in memo or depth > 50 or name not in comps:
+            return memo.get(name, 0)
+        memo[name] = 0                           # cycle guard
+        lines = comps[name]
+        t = local.get(name, 0)
+        whiles = _while_info(lines)
+        while_children = set()
+        for body, cond in whiles:
+            trips = _trip_count(comps.get(cond, []))
+            t += trips * total_of(body, depth + 1)
+            while_children.add(body)
+            while_children.add(cond)
+        for child in _calls(lines):
+            if child in while_children or child == name:
+                continue
+            t += total_of(child, depth + 1)
+        memo[name] = t
+        return t
+
+    total = total_of(entry_name)
+    detail = {k: v for k, v in local.items() if v}
+    return total, detail
+
+
+def collective_breakdown(hlo_text: str) -> dict:
+    """Per-opcode byte totals (flat, body-once — for inspection)."""
+    out = defaultdict(int)
+    for ln in hlo_text.splitlines():
+        if "=" not in ln:
+            continue
+        rhs = ln.split("=", 1)[1]
+        for c in COLLECTIVES:
+            if re.search(rf"\b{c}(\.\d+)?\(", rhs):
+                lhs_type = rhs.split(c)[0]
+                out[c] += _shape_bytes(lhs_type)
+                break
+    return dict(out)

@@ -1,0 +1,2 @@
+"""LM architecture zoo: dense GQA transformers, MoE, RWKV6, Mamba2 hybrid,
+whisper enc-dec, VLM backbone — unified train/prefill/decode API in lm.py."""

@@ -1,0 +1,107 @@
+"""GQA attention: chunked-causal for train/prefill (bounded score memory),
+direct for decode.  The Pallas flash kernel (repro.kernels.attention) is the
+TPU production path for train/prefill; the jnp path below is what the
+multi-device dry-run lowers (XLA fuses it; the chunking bounds live memory
+the same way flash blocking does).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def repeat_kv(k, group):
+    """[B, S, Hkv, D] -> [B, S, Hkv*group, D]."""
+    if group == 1:
+        return k
+    return jnp.repeat(k, group, axis=2)
+
+
+def chunked_causal_attention(q, k, v, chunk: int = 1024,
+                             compute_dtype=jnp.bfloat16):
+    """Causal self-attention with q chunked along sequence.
+
+    q: [B, S, H, D]; k, v: [B, S, Hkv, D] -> [B, S, H, D] (f32).
+    Peak score memory: [B, H, chunk, S] instead of [B, H, S, S].
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    # grouped-GQA einsum: query heads fold into [Hkv, g]; K/V stay at Hkv
+    # heads (materialising repeat_kv forces involuntary full
+    # rematerialisation under GSPMD when Hkv < TP degree — §Perf baseline)
+    k = k.astype(compute_dtype)
+    v = v.astype(compute_dtype)
+    q = q.astype(compute_dtype)
+    scale = D ** -0.5
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    kT = k.transpose(0, 2, 3, 1)                     # [B, Hkv, D, S]
+    vT = v.transpose(0, 2, 1, 3)                     # [B, Hkv, S, D]
+    q5 = q.reshape(B, S, Hkv, g, D).transpose(1, 0, 2, 3, 4)
+    qc = q5.reshape(n_chunks, chunk, B, Hkv, g, D)
+    qc = qc.transpose(0, 2, 3, 4, 1, 5)              # [n, B, Hkv, g, c, D]
+
+    cols = jnp.arange(S)
+
+    # checkpointed: per-chunk score/prob tensors recomputed in backward
+    @jax.checkpoint
+    def body(_, args):
+        i, qi = args                                  # qi: [B, Hkv, g, c, D]
+        s = jnp.einsum("bkgcd,bkds->bkgcs", qi, kT,
+                       preferred_element_type=jnp.float32) * scale
+        rows = i * chunk + jnp.arange(chunk)
+        mask = cols[None, :] <= rows[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(compute_dtype)
+        o = jnp.einsum("bkgcs,bksd->bkgcd", p, vT,
+                       preferred_element_type=jnp.float32)
+        return None, o
+
+    from repro.models import common as _cm
+    _, out = _cm.scan(body, None, (jnp.arange(n_chunks), qc))
+    # [n, B, Hkv, g, c, D] -> [B, (n c)=S, (Hkv g)=H, D]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, t_pos, compute_dtype=jnp.bfloat16):
+    """Single-token decode attention against a full cache.
+
+    q: [B, 1, H, D]; caches: [B, S, Hkv, D]; t_pos: current length (i32).
+    Entries at position >= t_pos are masked.  Returns [B, 1, H, D] f32.
+    """
+    B, S, Hkv, D = k_cache.shape
+    Q = q.shape[1]
+    H = q.shape[2]
+    g = H // Hkv
+    k = k_cache.astype(compute_dtype)
+    v = v_cache.astype(compute_dtype)
+    scale = D ** -0.5
+    q5 = q.astype(compute_dtype).reshape(B, Q, Hkv, g, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q5, k,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (jnp.arange(S) < t_pos)[None, None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(compute_dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Q, H, D)
+
+
+def bidirectional_attention(q, k, v, compute_dtype=jnp.bfloat16):
+    """Full (non-causal) attention, used by the whisper encoder and
+    cross-attention.  q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D]."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    k = repeat_kv(k, H // Hkv).astype(compute_dtype)
+    v = repeat_kv(v, H // Hkv).astype(compute_dtype)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(compute_dtype), k,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    p = jax.nn.softmax(s, axis=-1).astype(compute_dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v,
+                      preferred_element_type=jnp.float32)

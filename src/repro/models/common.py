@@ -1,0 +1,152 @@
+"""Shared building blocks for the LM zoo.
+
+Dtype policy: parameters are stored in ``cfg.param_dtype`` (f32 for training
+with FSDP-sharded optimizer state), matmuls run in ``cfg.compute_dtype``
+(bf16) with f32 accumulation via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict of arrays
+
+# ---------------------------------------------------------------------------
+# scan with a global unroll switch.  XLA's HloCostAnalysis counts while-loop
+# bodies ONCE; the dry-run's depth-delta FLOPs measurement therefore compiles
+# shallow (L=1/L=2) models with every structural scan fully unrolled.
+# ---------------------------------------------------------------------------
+_UNROLL = False
+
+
+@contextlib.contextmanager
+def unroll_scans():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(body, init, xs, length=None):
+    """lax.scan honoring the dry-run unroll switch (structural scans only —
+    time-recurrence scans stay rolled; their FLOPs share is <3%, DESIGN.md)."""
+    if _UNROLL:
+        n = length
+        if n is None:
+            n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        return jax.lax.scan(body, init, xs, length=length, unroll=max(n, 1))
+    return jax.lax.scan(body, init, xs, length=length)
+
+
+def mm(x, w, compute_dtype=jnp.bfloat16):
+    """Matmul with bf16 inputs, f32 accumulation."""
+    return jax.lax.dot_general(
+        x.astype(compute_dtype), w.astype(compute_dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else (d_in ** -0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32))
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def rope_tables(positions, head_dim, theta=1e4):
+    """positions: i32[...]; returns (cos, sin) with trailing dim head_dim//2."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., S, H, D]; cos/sin: [..., S, D//2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :] if x.ndim == cos.ndim + 2 else cos
+    s = sin[..., None, :] if x.ndim == sin.ndim + 2 else sin
+    # broadcast cos/sin over the head axis: x is [B, S, H, D]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def swiglu(x_gate, x_up):
+    return jax.nn.silu(x_gate) * x_up
+
+
+def softmax_xent(logits, labels, vocab):
+    """Mean token cross-entropy; logits f32 [N, V], labels i32 [N]."""
+    logits = logits.astype(jnp.float32)
+    lmax = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - lmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + lmax[..., 0]
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def chunked_lm_loss(x, emb, labels, n_chunks: int = 8,
+                    compute_dtype=jnp.bfloat16):
+    """Cross-entropy over tied-embedding logits without materialising the
+    full [B, S, V] tensor: scan over sequence chunks.
+
+    x: [B, S, d] final hidden states; emb: [V, d]; labels: [B, S].
+    """
+    B, S, d = x.shape
+    V = emb.shape[0]
+    while S % n_chunks:
+        n_chunks -= 1
+    xc = x.reshape(B, n_chunks, S // n_chunks, d).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+
+    # checkpointed: logits are recomputed in backward, never all live at once
+    @jax.checkpoint
+    def body(acc, xl):
+        xi, li = xl
+        logits = mm(xi, emb.T, compute_dtype)            # [B, s, V] f32
+        return acc + softmax_xent(logits.reshape(-1, V), li.reshape(-1), V), None
+
+    total, _ = scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / n_chunks
+
+
+def chunked_time_scan(step, carry0, seq, chunk: int = 64, remat: bool = True):
+    """Recurrence over time in remat'd chunks: backward keeps carries only at
+    chunk boundaries (T/chunk of them) instead of every step.
+
+    step(carry, x_t) -> (carry, y_t); seq: pytree with leading time axis T.
+    """
+    T = jax.tree_util.tree_leaves(seq)[0].shape[0]
+    if T < 2 * chunk or T % chunk:
+        return jax.lax.scan(step, carry0, seq)
+
+    n = T // chunk
+    seq_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), seq)
+
+    def chunk_body(carry, xs):
+        return jax.lax.scan(step, carry, xs)
+
+    if remat:
+        chunk_body = jax.checkpoint(chunk_body)
+    carry, ys = jax.lax.scan(chunk_body, carry0, seq_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((T,) + a.shape[2:]), ys)
+    return carry, ys

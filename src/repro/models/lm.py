@@ -1,0 +1,135 @@
+"""Unified LM API over all families:
+
+    init_params(cfg, key)                    -> params pytree
+    forward_hidden(cfg, params, batch)       -> final hidden states
+    loss_fn(cfg, params, batch)              -> scalar loss
+    train_step(cfg, params, opt, batch, lr)  -> (params, opt, metrics)
+    make_decode_state(cfg, B, S)             -> KV cache / recurrent state
+    decode_step(cfg, params, token, state, t_pos) -> (logits, state)
+
+``batch`` is a dict with "tokens"/"labels" (+ family-specific stub inputs:
+"frames" for audio, "patches" for vlm).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import moe as moe_m
+from repro.models import rwkv6 as rwkv_m
+from repro.models import transformer as tfm
+from repro.models import whisper as whisper_m
+from repro.models import zamba2 as zamba_m
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+
+
+def init_params(cfg: ArchConfig, key):
+    if cfg.family in ("dense", "vlm"):
+        return tfm.init_params(cfg, key)
+    if cfg.family == "moe":
+        return moe_m.init_params(cfg, key)
+    if cfg.family == "ssm":
+        return rwkv_m.init_params(cfg, key)
+    if cfg.family == "hybrid":
+        return zamba_m.init_params(cfg, key)
+    if cfg.family == "audio":
+        return whisper_m.init_params(cfg, key)
+    raise ValueError(cfg.family)
+
+
+def forward_hidden(cfg: ArchConfig, params, batch, attn_chunk=1024,
+                   remat=False):
+    """Returns (hidden [B, S, d] aligned with labels, aux_loss)."""
+    tokens = batch["tokens"]
+    if cfg.family == "dense":
+        x, _, aux = tfm.forward(cfg, params, tokens, attn_chunk=attn_chunk,
+                                remat=remat)
+        return x, aux
+    if cfg.family == "vlm":
+        x, _, aux = tfm.forward(cfg, params, tokens,
+                                patch_embeds=batch["patches"],
+                                attn_chunk=attn_chunk, remat=remat)
+        return x[:, cfg.n_patches:], aux          # loss on text positions
+    if cfg.family == "moe":
+        x, _, aux = tfm.forward(cfg, params, tokens, attn_chunk=attn_chunk,
+                                ffn_fn=moe_m.moe_ffn_fn, remat=remat)
+        return x, aux
+    if cfg.family == "ssm":
+        x, _ = rwkv_m.forward(cfg, params, tokens)
+        return x, jnp.zeros((), jnp.float32)
+    if cfg.family == "hybrid":
+        x, _ = zamba_m.forward(cfg, params, tokens, attn_chunk=attn_chunk)
+        return x, jnp.zeros((), jnp.float32)
+    if cfg.family == "audio":
+        x = whisper_m.forward(cfg, params, tokens, batch["frames"],
+                              attn_chunk=attn_chunk)
+        return x, jnp.zeros((), jnp.float32)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, aux_weight=0.01, attn_chunk=1024,
+            remat=False):
+    x, aux = forward_hidden(cfg, params, batch, attn_chunk, remat=remat)
+    lm = cm.chunked_lm_loss(x, params["emb"], batch["labels"],
+                            compute_dtype=cfg.cdtype())
+    return lm + aux_weight * aux, (lm, aux)
+
+
+def train_step(cfg: ArchConfig, params, opt_state, batch, lr,
+               max_grad_norm: float = 1.0, attn_chunk: int = 1024,
+               remat: bool = False):
+    """One AdamW training step (grads via jax.grad, global-norm clipped)."""
+    (loss, (lm, aux)), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch, attn_chunk=attn_chunk, remat=remat),
+        has_aux=True)(params)
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    params, opt_state = adamw_update(grads, opt_state, params, lr)
+    metrics = {"loss": loss, "lm_loss": lm, "aux_loss": aux, "grad_norm": gnorm}
+    return params, opt_state, metrics
+
+
+def init_train_state(cfg: ArchConfig, key):
+    params = init_params(cfg, key)
+    return params, adamw_init(params)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def make_decode_state(cfg: ArchConfig, batch: int, seq_len: int):
+    if cfg.family in ("dense", "vlm", "moe"):
+        return tfm.make_cache(cfg, batch, seq_len)
+    if cfg.family == "ssm":
+        return rwkv_m.make_state(cfg, batch)
+    if cfg.family == "hybrid":
+        return zamba_m.make_state(cfg, batch, seq_len)
+    if cfg.family == "audio":
+        return whisper_m.make_cache(cfg, batch, seq_len)
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ArchConfig, params, token, state, t_pos):
+    """token: [B, 1] i32.  Returns (logits [B, 1, V], state')."""
+    if cfg.family in ("dense", "vlm"):
+        return tfm.decode_step(cfg, params, token, state, t_pos)
+    if cfg.family == "moe":
+        return tfm.decode_step(cfg, params, token, state, t_pos,
+                               ffn_fn=moe_m.moe_ffn_fn)
+    if cfg.family == "ssm":
+        return rwkv_m.decode_step(cfg, params, token, state, t_pos)
+    if cfg.family == "hybrid":
+        return zamba_m.decode_step(cfg, params, token, state, t_pos)
+    if cfg.family == "audio":
+        return whisper_m.decode_step(cfg, params, token, state, t_pos)
+    raise ValueError(cfg.family)
+
+
+def prefill(cfg: ArchConfig, params, batch, attn_chunk=1024):
+    """Prefill forward (logits for the last position only)."""
+    x, _ = forward_hidden(cfg, params, batch, attn_chunk)
+    logits = cm.mm(x[:, -1:], params["emb"].T, cfg.cdtype())
+    return logits

@@ -1,0 +1,170 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Per head (dk = dv = head size) the time-mix state S in R^{dk x dv} evolves
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,      w_t = exp(-exp(wf(x_t)))
+    y_t = (r_t)^T (diag(u) k_t v_t^T + S_{t-1})
+
+with token-shift interpolation feeding r/k/v/w/g projections and an output
+gate g (SiLU).  Channel-mix is the square-ReLU two-layer FFN of RWKV.
+
+Training/prefill runs the recurrence with ``lax.scan`` over time (exact;
+the chunked-parallel form is a recorded §Perf optimization); decode carries
+(S, token-shift) state — O(1) per token, which is what makes the
+``long_500k`` cell tractable for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ctx as dctx
+from repro.models import common as cm
+
+HEAD_SIZE = 64
+
+
+def _n_heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // HEAD_SIZE
+
+
+def init_layer_params(cfg: ArchConfig, key) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    H = _n_heads(cfg)
+    ks = jax.random.split(key, 12)
+    dt = cfg.pdtype()
+    di = cm.dense_init
+    return {
+        "ln1": jnp.ones((d,), dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "wr": di(ks[0], d, d, dt),
+        "wk": di(ks[1], d, d, dt),
+        "wv": di(ks[2], d, d, dt),
+        "wg": di(ks[3], d, d, dt),
+        "wo": di(ks[4], d, d, dt),
+        # data-dependent decay: low-rank lora + bias (the Finch signature)
+        "w_lora_a": di(ks[5], d, 64, dt),
+        "w_lora_b": di(ks[6], 64, d, dt),
+        "w_bias": jnp.full((d,), -4.0, dt),
+        "bonus_u": (jax.random.normal(ks[7], (H, HEAD_SIZE), jnp.float32) * 0.1).astype(dt),
+        "ln_x": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "cm_k": di(ks[8], d, ff, dt),
+        "cm_v": di(ks[9], ff, d, dt),
+        "cm_r": di(ks[10], d, d, dt),
+        "mu_ck": jnp.full((d,), 0.5, dt),
+        "mu_cr": jnp.full((d,), 0.5, dt),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    k_emb, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer_params(cfg, k))(layer_keys)
+    return {
+        "emb": cm.dense_init(k_emb, cfg.vocab, cfg.d_model, cfg.pdtype(), scale=0.02),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.pdtype()),
+    }
+
+
+def _shift_mix(x, x_prev, mu):
+    """Token shift: lerp between current and previous token, channel-wise.
+    x: [B, S, d]; x_prev: [B, d] (state before this block of tokens)."""
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    return x + (xs - x) * mu.astype(jnp.float32)
+
+
+def time_mix(cfg: ArchConfig, lp, x, x_prev, S0):
+    """x: [B, T, d]; x_prev: [B, d]; S0: [B, H, dk, dv].
+    Returns (y, x_last, S_T)."""
+    B, T, d = x.shape
+    H = _n_heads(cfg)
+    cd = cfg.cdtype()
+    r = cm.mm(_shift_mix(x, x_prev, lp["mu_r"]), lp["wr"], cd)
+    k = cm.mm(_shift_mix(x, x_prev, lp["mu_k"]), lp["wk"], cd)
+    v = cm.mm(_shift_mix(x, x_prev, lp["mu_v"]), lp["wv"], cd)
+    g = cm.mm(_shift_mix(x, x_prev, lp["mu_g"]), lp["wg"], cd)
+    xw = _shift_mix(x, x_prev, lp["mu_w"])
+    w_raw = lp["w_bias"].astype(jnp.float32) + cm.mm(
+        jnp.tanh(cm.mm(xw, lp["w_lora_a"], cd)), lp["w_lora_b"], cd)
+    w = jnp.exp(-jnp.exp(w_raw))                               # [B, T, d] in (0,1)
+
+    hs = (B, T, H, HEAD_SIZE)
+    r, k, v, w = (a.reshape(hs) for a in (r, k, v, w))
+    u = lp["bonus_u"].astype(jnp.float32)
+
+    def step(S, rkvw):
+        rt, kt, vt, wt = rkvw                                  # [B, H, hs]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = S * wt[..., None] + kv
+        return S, yt
+
+    seq = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))  # [T, B, H, hs]
+    S_T, y = cm.chunked_time_scan(step, S0, seq)
+    y = y.transpose(1, 0, 2, 3).reshape(B, T, d)                # [B, T, d]
+    y = cm.rms_norm(y, lp["ln_x"])
+    y = y * jax.nn.silu(g)
+    out = cm.mm(y, lp["wo"], cd)
+    return out, x[:, -1], S_T
+
+
+def channel_mix(cfg: ArchConfig, lp, x, x_prev):
+    cd = cfg.cdtype()
+    xk = _shift_mix(x, x_prev, lp["mu_ck"])
+    xr = _shift_mix(x, x_prev, lp["mu_cr"])
+    k = jnp.square(jax.nn.relu(cm.mm(xk, lp["cm_k"], cd)))
+    kv = cm.mm(k, lp["cm_v"], cd)
+    return jax.nn.sigmoid(cm.mm(xr, lp["cm_r"], cd)) * kv, x[:, -1]
+
+
+def layer_forward(cfg: ArchConfig, lp, x, state):
+    """state: dict(tm_x, cm_x: [B, d]; S: [B, H, dk, dv])."""
+    h = cm.rms_norm(x, lp["ln1"])
+    y, tm_x, S = time_mix(cfg, lp, h, state["tm_x"], state["S"])
+    x = x + y
+    h = cm.rms_norm(x, lp["ln2"])
+    y, cm_x = channel_mix(cfg, lp, h, state["cm_x"])
+    x = x + y
+    return x, {"tm_x": tm_x, "cm_x": cm_x, "S": S}
+
+
+def make_state(cfg: ArchConfig, batch, dtype=jnp.float32):
+    H = _n_heads(cfg)
+    return {
+        "tm_x": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dtype),
+        "cm_x": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dtype),
+        "S": jnp.zeros((cfg.n_layers, batch, H, HEAD_SIZE, HEAD_SIZE), dtype),
+    }
+
+
+def forward(cfg: ArchConfig, params, tokens, state=None):
+    """Full-sequence forward; returns (hidden, state')."""
+    B, S = tokens.shape
+    x = params["emb"][tokens].astype(jnp.float32)
+    if state is None:
+        state = make_state(cfg, B)
+
+    def body(x, layer):
+        lp, st = layer
+        x, st = layer_forward(cfg, lp, x, st)
+        x = dctx.constrain(x, "tokens3d")
+        return x, st
+
+    x, state = cm.scan(body, x, (params["layers"], state))
+    x = cm.rms_norm(x, params["ln_f"])
+    return x, state
+
+
+def decode_step(cfg: ArchConfig, params, token, state, t_pos=None):
+    """One-token decode: forward with T=1 (the recurrence IS the cache)."""
+    del t_pos
+    x, state = forward(cfg, params, token, state)
+    logits = cm.mm(x, params["emb"].T, cfg.cdtype())
+    return logits, state

@@ -1,0 +1,173 @@
+"""Llama-family decoder-only transformer with GQA (+ optional QKV bias),
+RMSNorm, RoPE and SwiGLU — covers deepseek-7b, qwen2-72b, internlm2-20b,
+smollm-135m and the internvl2-1b language backbone.
+
+Layer parameters are stacked on a leading [L, ...] axis and the stack is
+executed with ``lax.scan`` — one layer's HLO regardless of depth, which keeps
+multi-pod dry-run compiles tractable for 80-layer models.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ctx as dctx
+from repro.models import attention as attn
+from repro.models import common as cm
+
+
+def init_layer_params(cfg: ArchConfig, key) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    H, Hkv, ff = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    dt = cfg.pdtype()
+    p = {
+        "ln1": jnp.ones((d,), dt),
+        "wq": cm.dense_init(ks[0], d, H * hd, dt),
+        "wk": cm.dense_init(ks[1], d, Hkv * hd, dt),
+        "wv": cm.dense_init(ks[2], d, Hkv * hd, dt),
+        "wo": cm.dense_init(ks[3], H * hd, d, dt),
+        "ln2": jnp.ones((d,), dt),
+        "w_gate": cm.dense_init(ks[4], d, ff, dt),
+        "w_up": cm.dense_init(ks[5], d, ff, dt),
+        "w_down": cm.dense_init(ks[6], ff, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((Hkv * hd,), dt)
+        p["bv"] = jnp.zeros((Hkv * hd,), dt)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer_params(cfg, k))(layer_keys)
+    params = {
+        "emb": cm.dense_init(k_emb, cfg.vocab, cfg.d_model, cfg.pdtype(), scale=0.02),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.pdtype()),
+    }
+    if cfg.n_patches:
+        params["patch_proj"] = cm.dense_init(k_out, cfg.d_model, cfg.d_model,
+                                             cfg.pdtype())
+    return params
+
+
+def _qkv(cfg: ArchConfig, lp, x):
+    cd = cfg.cdtype()
+    q = cm.mm(x, lp["wq"], cd)
+    k = cm.mm(x, lp["wk"], cd)
+    v = cm.mm(x, lp["wv"], cd)
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(jnp.float32)
+        k = k + lp["bk"].astype(jnp.float32)
+        v = v + lp["bv"].astype(jnp.float32)
+    B, S, _ = x.shape
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def _mlp(cfg: ArchConfig, lp, x):
+    cd = cfg.cdtype()
+    h = cm.swiglu(cm.mm(x, lp["w_gate"], cd), cm.mm(x, lp["w_up"], cd))
+    return cm.mm(h, lp["w_down"], cd), jnp.zeros((), jnp.float32)
+
+
+def layer_forward(cfg: ArchConfig, lp, x, cos, sin, attn_chunk=1024,
+                  ffn_fn=None):
+    """Full-sequence causal layer (train / prefill). x: [B, S, d] f32.
+    Returns (x', (k, v), aux) with k/v for cache construction."""
+    h = cm.rms_norm(x, lp["ln1"])
+    q, k, v = _qkv(cfg, lp, h)
+    q = cm.apply_rope(q, cos, sin)
+    k = cm.apply_rope(k, cos, sin)
+    o = attn.chunked_causal_attention(q, k, v, chunk=attn_chunk,
+                                      compute_dtype=cfg.cdtype())
+    B, S, _, _ = o.shape
+    x = x + cm.mm(o.reshape(B, S, -1), lp["wo"], cfg.cdtype())
+    h = cm.rms_norm(x, lp["ln2"])
+    y, aux = (ffn_fn or _mlp)(cfg, lp, h)
+    x = x + y
+    return x, (k, v), aux
+
+
+def layer_decode(cfg: ArchConfig, lp, x, kc, vc, t_pos, cos, sin,
+                 ffn_fn=None):
+    """One-token decode. x: [B, 1, d]; kc/vc: [B, S, Hkv, hd] caches."""
+    h = cm.rms_norm(x, lp["ln1"])
+    q, k, v = _qkv(cfg, lp, h)
+    q = cm.apply_rope(q, cos, sin)
+    k = cm.apply_rope(k, cos, sin)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), t_pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), t_pos, axis=1)
+    o = attn.decode_attention(q, kc, vc, t_pos + 1, cfg.cdtype())
+    B = x.shape[0]
+    x = x + cm.mm(o.reshape(B, 1, -1), lp["wo"], cfg.cdtype())
+    h = cm.rms_norm(x, lp["ln2"])
+    y, _ = (ffn_fn or _mlp)(cfg, lp, h)
+    x = x + y
+    return x, kc, vc
+
+
+def embed_tokens(cfg: ArchConfig, params, tokens):
+    return params["emb"][tokens].astype(jnp.float32)
+
+
+def forward(cfg: ArchConfig, params, tokens, patch_embeds=None,
+            attn_chunk: int = 1024, return_cache: bool = False,
+            ffn_fn=None, remat: bool = False):
+    """Full-sequence forward.  tokens: [B, S] (plus optional VLM patch
+    embeddings [B, P, d] prepended).  Returns (hidden [B, S_tot, d],
+    caches | None, aux_loss)."""
+    x = dctx.constrain(embed_tokens(cfg, params, tokens), "tokens3d")
+    if cfg.n_patches and patch_embeds is not None:
+        pe = cm.mm(patch_embeds.astype(jnp.float32), params["patch_proj"],
+                   cfg.cdtype())
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    cos, sin = cm.rope_tables(pos, cfg.hd, cfg.rope_theta)
+
+    layer_fn = lambda lp, x: layer_forward(cfg, lp, x, cos, sin,
+                                           attn_chunk, ffn_fn)
+    if remat:
+        layer_fn = jax.checkpoint(layer_fn)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, kv, a = layer_fn(lp, x)
+        x = dctx.constrain(x, "residual")
+        return (x, aux + a), kv if return_cache else None
+
+    (x, aux), caches = cm.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = cm.rms_norm(x, params["ln_f"])
+    return x, caches, aux
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, t_pos, ffn_fn=None):
+    """token: [B, 1] i32; cache: dict(k=[L,B,S,Hkv,hd], v=...). One step."""
+    x = embed_tokens(cfg, params, token)
+    cos, sin = cm.rope_tables(jnp.full((1,), t_pos), cfg.hd, cfg.rope_theta)
+
+    def body(x, layer):
+        lp, kc, vc = layer
+        x, kc, vc = layer_decode(cfg, lp, x, kc, vc, t_pos, cos, sin, ffn_fn)
+        return x, (kc, vc)
+
+    x, (kc, vc) = cm.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = cm.rms_norm(x, params["ln_f"])
+    logits = cm.mm(x, params["emb"].T, cfg.cdtype())
+    return logits, {"k": kc, "v": vc}
+
+
+def make_cache(cfg: ArchConfig, batch, seq_len, dtype=None):
+    dtype = dtype or cfg.cdtype()
+    shape = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,185 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356) — transformer backbone
+only; the conv/log-mel frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed frame embeddings [B, enc_frames, d].
+
+Encoder: bidirectional self-attention over frames (+ learned positions).
+Decoder: causal self-attention + cross-attention to encoder output.
+Decode keeps a self-attn KV cache; cross K/V are computed once at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import common as cm
+
+
+def _init_attn(key, d, H, hd, dt):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": cm.dense_init(ks[0], d, H * hd, dt),
+        "wk": cm.dense_init(ks[1], d, H * hd, dt),
+        "wv": cm.dense_init(ks[2], d, H * hd, dt),
+        "wo": cm.dense_init(ks[3], H * hd, d, dt),
+    }
+
+
+def _init_mlp(key, d, ff, dt):
+    k1, k2 = jax.random.split(key)
+    return {"w1": cm.dense_init(k1, d, ff, dt), "w2": cm.dense_init(k2, ff, d, dt)}
+
+
+def init_enc_layer(cfg, key):
+    dt = cfg.pdtype()
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt), "b1": jnp.zeros((cfg.d_model,), dt),
+        "attn": _init_attn(k1, cfg.d_model, cfg.n_heads, cfg.hd, dt),
+        "ln2": jnp.ones((cfg.d_model,), dt), "b2": jnp.zeros((cfg.d_model,), dt),
+        "mlp": _init_mlp(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init_dec_layer(cfg, key):
+    dt = cfg.pdtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt), "b1": jnp.zeros((cfg.d_model,), dt),
+        "self": _init_attn(k1, cfg.d_model, cfg.n_heads, cfg.hd, dt),
+        "lnx": jnp.ones((cfg.d_model,), dt), "bx": jnp.zeros((cfg.d_model,), dt),
+        "cross": _init_attn(k2, cfg.d_model, cfg.n_heads, cfg.hd, dt),
+        "ln2": jnp.ones((cfg.d_model,), dt), "b2": jnp.zeros((cfg.d_model,), dt),
+        "mlp": _init_mlp(k3, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 5)
+    dt = cfg.pdtype()
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "emb": cm.dense_init(ks[2], cfg.vocab, cfg.d_model, dt, scale=0.02),
+        "enc_pos": cm.dense_init(ks[3], cfg.enc_frames, cfg.d_model, dt, scale=0.02),
+        "enc": jax.vmap(lambda k: init_enc_layer(cfg, k))(enc_keys),
+        "dec": jax.vmap(lambda k: init_dec_layer(cfg, k))(dec_keys),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "bn_f": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def _heads(cfg, y, B, S):
+    return y.reshape(B, S, cfg.n_heads, cfg.hd)
+
+
+def _gelu_mlp(cfg, mp, x):
+    cd = cfg.cdtype()
+    return cm.mm(jax.nn.gelu(cm.mm(x, mp["w1"], cd)), mp["w2"], cd)
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames: [B, F, d] (stub embeddings) -> encoder output [B, F, d]."""
+    B, F, d = frames.shape
+    x = frames.astype(jnp.float32) + params["enc_pos"].astype(jnp.float32)[None]
+    cd = cfg.cdtype()
+
+    def body(x, lp):
+        h = cm.layer_norm(x, lp["ln1"], lp["b1"])
+        q = _heads(cfg, cm.mm(h, lp["attn"]["wq"], cd), B, F)
+        k = _heads(cfg, cm.mm(h, lp["attn"]["wk"], cd), B, F)
+        v = _heads(cfg, cm.mm(h, lp["attn"]["wv"], cd), B, F)
+        o = attn.bidirectional_attention(q, k, v, cd)
+        x = x + cm.mm(o.reshape(B, F, -1), lp["attn"]["wo"], cd)
+        h = cm.layer_norm(x, lp["ln2"], lp["b2"])
+        x = x + _gelu_mlp(cfg, lp["mlp"], h)
+        return x, None
+
+    x, _ = cm.scan(body, x, params["enc"])
+    return x
+
+
+def _dec_layer(cfg, lp, x, enc_kv, self_kv, t_pos, B, S, causal_full):
+    """Shared decoder layer; self_kv None -> full-sequence causal."""
+    cd = cfg.cdtype()
+    h = cm.layer_norm(x, lp["ln1"], lp["b1"])
+    q = _heads(cfg, cm.mm(h, lp["self"]["wq"], cd), B, S)
+    k = _heads(cfg, cm.mm(h, lp["self"]["wk"], cd), B, S)
+    v = _heads(cfg, cm.mm(h, lp["self"]["wv"], cd), B, S)
+    if self_kv is None:
+        o = attn.chunked_causal_attention(q, k, v, compute_dtype=cd)
+        kc = vc = None
+    else:
+        kc, vc = self_kv
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), t_pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), t_pos, axis=1)
+        o = attn.decode_attention(q, kc, vc, t_pos + 1, cd)
+    x = x + cm.mm(o.reshape(B, S, -1), lp["self"]["wo"], cd)
+    # cross attention to (precomputed) encoder K/V
+    ek, ev = enc_kv
+    h = cm.layer_norm(x, lp["lnx"], lp["bx"])
+    q = _heads(cfg, cm.mm(h, lp["cross"]["wq"], cd), B, S)
+    o = attn.bidirectional_attention(q, ek, ev, cd)
+    x = x + cm.mm(o.reshape(B, S, -1), lp["cross"]["wo"], cd)
+    h = cm.layer_norm(x, lp["ln2"], lp["b2"])
+    x = x + _gelu_mlp(cfg, lp["mlp"], h)
+    return x, kc, vc
+
+
+def _enc_kv(cfg, params, enc_out):
+    """Per-layer cross K/V from encoder output: [L, B, F, H, hd] x2."""
+    B, F, _ = enc_out.shape
+    cd = cfg.cdtype()
+
+    def one(lp):
+        k = _heads(cfg, cm.mm(enc_out, lp["cross"]["wk"], cd), B, F)
+        v = _heads(cfg, cm.mm(enc_out, lp["cross"]["wv"], cd), B, F)
+        return k, v
+
+    return jax.vmap(one)(params["dec"])
+
+
+def forward(cfg: ArchConfig, params, tokens, frames, attn_chunk=1024):
+    """Training/prefill forward: returns decoder hidden states [B, S, d]."""
+    B, S = tokens.shape
+    enc_out = encode(cfg, params, frames)
+    ek, ev = _enc_kv(cfg, params, enc_out)
+    x = params["emb"][tokens].astype(jnp.float32)
+
+    def body(x, layer):
+        lp, eki, evi = layer
+        x, _, _ = _dec_layer(cfg, lp, x, (eki, evi), None, 0, B, S, True)
+        return x, None
+
+    x, _ = cm.scan(body, x, (params["dec"], ek, ev))
+    return cm.layer_norm(x, params["ln_f"], params["bn_f"])
+
+
+def decode_step(cfg: ArchConfig, params, token, cache, t_pos):
+    """cache: dict(k, v: [L, B, S, H, hd] self caches; ek, ev cross K/V)."""
+    B = token.shape[0]
+    x = params["emb"][token].astype(jnp.float32)
+
+    def body(x, layer):
+        lp, kc, vc, eki, evi = layer
+        x, kc, vc = _dec_layer(cfg, lp, x, (eki, evi), (kc, vc), t_pos, B, 1, False)
+        return x, (kc, vc)
+
+    x, (kc, vc) = cm.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["ek"], cache["ev"]))
+    x = cm.layer_norm(x, params["ln_f"], params["bn_f"])
+    logits = cm.mm(x, params["emb"].T, cfg.cdtype())
+    return logits, dict(cache, k=kc, v=vc)
+
+
+def make_cache(cfg: ArchConfig, batch, seq_len, frames=None, dtype=None):
+    dtype = dtype or cfg.cdtype()
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+    F = cfg.enc_frames
+    return {
+        "k": jnp.zeros((L, batch, seq_len, H, hd), dtype),
+        "v": jnp.zeros((L, batch, seq_len, H, hd), dtype),
+        "ek": jnp.zeros((L, batch, F, H, hd), dtype),
+        "ev": jnp.zeros((L, batch, F, H, hd), dtype),
+    }

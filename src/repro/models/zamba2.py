@@ -1,0 +1,224 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): a backbone of Mamba2 blocks with a
+single *shared* attention+MLP block applied every ``shared_attn_every``
+layers (parameter reuse is the Zamba signature — one transformer block's
+weights serve all applications).
+
+Mamba2 (arXiv:2405.21060, SSD) block here: in-projection to (z, x, B, C, dt),
+depthwise causal conv on x, selective state update with scalar-per-head decay
+
+    h_t = exp(-exp(A_log) * dt_t) * h_{t-1} + dt_t * (B_t x_t^T)
+    y_t = C_t^T h_t + D * x_t
+
+with state h in R^{n_state x d_head} per head.  Recurrence via lax.scan
+(exact; chunked form is a recorded §Perf optimization).  Decode carries
+(conv window, h) — O(1) per token, so ``long_500k`` is tractable; only the
+shared attention block keeps a KV cache (seq-sharded in the dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ctx as dctx
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import transformer as tfm
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // 64            # mamba2 head size 64
+    return d_inner, n_heads
+
+
+def init_mamba_params(cfg: ArchConfig, key) -> dict:
+    d = cfg.d_model
+    d_inner, H = _dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    dt = cfg.pdtype()
+    di = cm.dense_init
+    return {
+        "ln": jnp.ones((d,), dt),
+        # fused in-projection: z, x, B, C, dt
+        "w_in": di(ks[0], d, 2 * d_inner + 2 * n + H, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_inner), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "A_log": jnp.zeros((H,), dt),
+        "D": jnp.ones((H,), dt),
+        "dt_bias": jnp.zeros((H,), dt),
+        "w_out": di(ks[2], d_inner, d, dt),
+        "ln_y": jnp.ones((d_inner,), dt),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    k_emb, k_layers, k_shared = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_mamba_params(cfg, k))(layer_keys)
+    return {
+        "emb": cm.dense_init(k_emb, cfg.vocab, cfg.d_model, cfg.pdtype(), scale=0.02),
+        "layers": layers,
+        "shared": tfm.init_layer_params(cfg, k_shared),   # ONE shared block
+        "ln_f": jnp.ones((cfg.d_model,), cfg.pdtype()),
+    }
+
+
+def _split_in(cfg, proj):
+    d_inner, H = _dims(cfg)
+    n = cfg.ssm_state
+    z = proj[..., :d_inner]
+    xs = proj[..., d_inner:2 * d_inner]
+    Bm = proj[..., 2 * d_inner:2 * d_inner + n]
+    Cm = proj[..., 2 * d_inner + n:2 * d_inner + 2 * n]
+    dt_raw = proj[..., 2 * d_inner + 2 * n:]
+    return z, xs, Bm, Cm, dt_raw
+
+
+def mamba_forward(cfg: ArchConfig, lp, x, conv_state, h0):
+    """x: [B, T, d]; conv_state: [B, K-1, d_inner]; h0: [B, H, n, hd].
+    Returns (y, conv_state', h_T)."""
+    B, T, d = x.shape
+    d_inner, H = _dims(cfg)
+    n, K = cfg.ssm_state, cfg.ssm_conv
+    hd = d_inner // H
+    cd = cfg.cdtype()
+    hn = cm.rms_norm(x, lp["ln"])
+    proj = cm.mm(hn, lp["w_in"], cd)
+    z, xs, Bm, Cm, dt_raw = _split_in(cfg, proj)
+
+    # depthwise causal conv over time (window K) with carried state
+    xc = jnp.concatenate([conv_state, xs], axis=1)            # [B, K-1+T, di]
+    w = lp["conv_w"].astype(jnp.float32)
+    xconv = sum(xc[:, i:i + T] * w[i][None, None] for i in range(K))
+    xconv = jax.nn.silu(xconv + lp["conv_b"].astype(jnp.float32))
+    conv_state_new = xc[:, -(K - 1):] if K > 1 else conv_state
+
+    dt_t = jax.nn.softplus(dt_raw + lp["dt_bias"].astype(jnp.float32))  # [B,T,H]
+    a = jnp.exp(-jnp.exp(lp["A_log"].astype(jnp.float32))[None, None] * dt_t)
+    xh = xconv.reshape(B, T, H, hd)
+
+    def step(h, inp):
+        xt, Bt, Ct, at, dtt = inp
+        # h: [B, H, n, hd]
+        upd = jnp.einsum("bn,bhp->bhnp", Bt, xt * dtt[..., None])
+        h = h * at[..., None, None] + upd
+        yt = jnp.einsum("bn,bhnp->bhp", Ct, h)
+        return h, yt
+
+    seq = (xh.transpose(1, 0, 2, 3), Bm.transpose(1, 0, 2),
+           Cm.transpose(1, 0, 2), a.transpose(1, 0, 2), dt_t.transpose(1, 0, 2))
+    hT, y = cm.chunked_time_scan(step, h0, seq)
+    y = y.transpose(1, 0, 2, 3).reshape(B, T, d_inner)
+    y = y + xconv * lp["D"].astype(jnp.float32).repeat(hd)[None, None]
+    y = cm.rms_norm(y, lp["ln_y"]) * jax.nn.silu(z)
+    out = cm.mm(y, lp["w_out"], cd)
+    return x + out, conv_state_new, hT
+
+
+def make_state(cfg: ArchConfig, batch, seq_len, dtype=jnp.float32,
+               cache_dtype=None):
+    """Recurrent state for all layers + KV cache for the shared attn block."""
+    d_inner, H = _dims(cfg)
+    L = cfg.n_layers
+    n_apps = _n_shared_apps(cfg)
+    cache_dtype = cache_dtype or cfg.cdtype()
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, d_inner), dtype),
+        "h": jnp.zeros((L, batch, H, cfg.ssm_state, d_inner // H), dtype),
+        "k": jnp.zeros((n_apps, batch, seq_len, cfg.n_kv_heads, cfg.hd), cache_dtype),
+        "v": jnp.zeros((n_apps, batch, seq_len, cfg.n_kv_heads, cfg.hd), cache_dtype),
+    }
+
+
+def _n_shared_apps(cfg: ArchConfig) -> int:
+    e = max(cfg.shared_attn_every, 1)
+    return max(1, cfg.n_layers // e)
+
+
+def forward(cfg: ArchConfig, params, tokens, state=None, attn_chunk=1024):
+    """Full-sequence forward. The shared block is applied after every
+    ``shared_attn_every``-th mamba layer (same weights each application).
+    The layer stack runs as ``every``-sized scan segments with the shared
+    block between segments, so FLOPs match the architecture exactly."""
+    B, T = tokens.shape
+    x = params["emb"][tokens].astype(jnp.float32)
+    if state is None:
+        state = make_state(cfg, B, T)
+    pos = jnp.arange(T)
+    cos, sin = cm.rope_tables(pos, cfg.hd, cfg.rope_theta)
+    every = max(cfg.shared_attn_every, 1)
+    n_apps = _n_shared_apps(cfg)
+    L = cfg.n_layers
+
+    def body(x, layer):
+        lp, conv0, h0 = layer
+        x, conv1, h1 = mamba_forward(cfg, lp, x, conv0, h0)
+        x = dctx.constrain(x, "tokens3d")
+        return x, (conv1, h1)
+
+    convs, hs = [], []
+    for app in range(n_apps + 1):
+        lo = app * every
+        hi = min((app + 1) * every, L)
+        if lo >= L:
+            break
+        seg = jax.tree_util.tree_map(lambda a: a[lo:hi], params["layers"])
+        x, (conv1, h1) = cm.scan(
+            body, x, (seg, state["conv"][lo:hi], state["h"][lo:hi]))
+        convs.append(conv1)
+        hs.append(h1)
+        if hi == lo + every and app < n_apps:
+            x, _, _ = tfm.layer_forward(cfg, params["shared"], x, cos, sin,
+                                        attn_chunk)
+    conv = jnp.concatenate(convs, axis=0)
+    h = jnp.concatenate(hs, axis=0)
+    x = cm.rms_norm(x, params["ln_f"])
+    state = dict(state, conv=conv, h=h)
+    return x, state
+
+
+def decode_step(cfg: ArchConfig, params, token, state, t_pos):
+    """One-token decode: mamba recurrences + shared-attn KV caches."""
+    B = token.shape[0]
+    x = params["emb"][token].astype(jnp.float32)
+    cos, sin = cm.rope_tables(jnp.full((1,), t_pos), cfg.hd, cfg.rope_theta)
+    every = max(cfg.shared_attn_every, 1)
+    n_apps = _n_shared_apps(cfg)
+    L = cfg.n_layers
+
+    # scan over mamba layers (recurrent state only)
+    def body(carry, layer):
+        x, i = carry
+        lp, conv0, h0 = layer
+        x, conv1, h1 = mamba_forward(cfg, lp, x, conv0, h0)
+        return (x, i + 1), (conv1, h1)
+
+    # we interleave shared-attn applications by running the mamba scan in
+    # ``every``-sized segments; the shared block mutates its own app cache.
+    xs = x
+    convs, hs = [], []
+    kc_all, vc_all = state["k"], state["v"]
+    for app in range(n_apps + 1):
+        lo = app * every
+        hi = min((app + 1) * every, L)
+        if lo >= L:
+            break
+        seg = jax.tree_util.tree_map(lambda a: a[lo:hi], params["layers"])
+        (xs, _), (conv1, h1) = cm.scan(
+            body, (xs, jnp.zeros((), jnp.int32)),
+            (seg, state["conv"][lo:hi], state["h"][lo:hi]))
+        convs.append(conv1)
+        hs.append(h1)
+        if hi == lo + every and app < n_apps:
+            kc, vc = kc_all[app], vc_all[app]
+            xs, kc, vc = tfm.layer_decode(cfg, params["shared"], xs, kc, vc,
+                                          t_pos, cos, sin)
+            kc_all = kc_all.at[app].set(kc)
+            vc_all = vc_all.at[app].set(vc)
+    conv = jnp.concatenate(convs, axis=0)
+    h = jnp.concatenate(hs, axis=0)
+    xs = cm.rms_norm(xs, params["ln_f"])
+    logits = cm.mm(xs, params["emb"].T, cfg.cdtype())
+    return logits, {"conv": conv, "h": h, "k": kc_all, "v": vc_all}

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Neuro-core accuracy needs x64 (repro.core enables it at import); tests that
+# exercise the LM zoo use explicit f32 dtypes so both coexist.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,94 @@
+"""Paper-claim validation (Fig. 5/6/7 scale-downs as assertions):
+  * Euler phase shift grows with dt; CVODE does not accumulate shift,
+  * CVODE step count plummets for quiet dynamics (Fig. 6),
+  * discontinuity rate degrades CVODE as the paper describes (Fig. 7).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import bdf, morphology
+from repro.core.calibrate import threshold_current
+from repro.core.cell import CellModel
+from repro.core.fixed_step import run_fixed
+
+
+@pytest.fixture(scope="module")
+def model():
+    return CellModel(morphology.soma_only())
+
+
+@pytest.fixture(scope="module")
+def i_th(model):
+    return threshold_current(model, t_end=100.0)
+
+
+def _spike_times(ts, vs, thr=-20.0):
+    out = []
+    for i in range(1, len(ts)):
+        if vs[i - 1] <= thr < vs[i]:
+            f = (thr - vs[i - 1]) / (vs[i] - vs[i - 1])
+            out.append(ts[i - 1] + f * (ts[i] - ts[i - 1]))
+    return np.array(out)
+
+
+def test_euler_phase_shift_grows_with_dt(model, i_th):
+    # 3.5x threshold: safely above the type-II repetitive-firing onset
+    T, iinj = 150.0, 3.5 * i_th
+    curves = {}
+    for dt in (0.001, 0.005, 0.025):
+        _, ns, tr = run_fixed(model, model.init_state(), T, iinj,
+                              method="euler", dt=dt, record_every=1)
+        curves[dt] = _spike_times(np.arange(1, ns + 1) * dt, np.asarray(tr))
+    ref = curves[0.001]
+    n = min(len(ref), len(curves[0.005]), len(curves[0.025]))
+    assert n >= 3
+    shift5 = np.abs(curves[0.005][:n] - ref[:n]).max()
+    shift25 = np.abs(curves[0.025][:n] - ref[:n]).max()
+    assert shift25 > shift5                       # paper Fig.5: shift ~ dt
+    # and the shift accumulates: last spike shifted more than first
+    assert abs(curves[0.025][n - 1] - ref[n - 1]) > abs(curves[0.025][0] - ref[0])
+
+
+def test_cvode_beats_euler_steps_quiet_vs_active(model, i_th):
+    """Fig. 6 trend: the step-count advantage shrinks as stiffness rises."""
+    T = 500.0
+    n_fixed = int(T / 0.025)
+    ratios = {}
+    for pct in (0.5, 5.0):
+        iinj = pct * i_th
+        opts = bdf.BDFOptions(atol=1e-3)
+        st = bdf.reinit(model, 0.0, model.init_state(), iinj, opts)
+        st = jax.jit(lambda s, ii=iinj: bdf.advance_to(model, s, T, ii, opts))(st)
+        assert not bool(st.failed)
+        ratios[pct] = n_fixed / int(st.nst)
+    assert ratios[0.5] > 100                      # paper: 434x at <50%
+    assert ratios[5.0] > 2                        # paper: 9.4x at 500%
+    assert ratios[0.5] > ratios[5.0]
+
+
+def test_discontinuity_rate_controls_cvode_cost(model):
+    """Fig. 7 trend: steps grow with event frequency (IVP resets)."""
+    T, w = 200.0, 1e-3
+    opts = bdf.BDFOptions(atol=1e-3)
+    steps = {}
+    for freq in (20.0, 200.0):
+        period = 1000.0 / freq
+        n_ev = int(T / period)
+        st = bdf.reinit(model, 0.0, model.init_state(), 0.0, opts)
+        adv = jax.jit(lambda s, tl: bdf.advance_to(model, s, tl, 0.0, opts))
+        dlv = jax.jit(lambda s: bdf.deliver_event(model, s, w, 0.0, 0.0, opts))
+        for k in range(1, n_ev + 1):
+            st = adv(st, k * period)
+            st = dlv(st)
+        st = adv(st, T)
+        assert not bool(st.failed)
+        steps[freq] = int(st.nst)
+    assert steps[200.0] > 2 * steps[20.0]
+    assert int(st.nreset) == int(T / (1000.0 / 200.0))
+
+
+def test_threshold_current_is_calibrated(model, i_th):
+    from repro.core.calibrate import _n_spikes
+    assert _n_spikes(model, 0.95 * i_th, 100.0) == 0
+    assert _n_spikes(model, 1.05 * i_th, 100.0) >= 1

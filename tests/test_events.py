@@ -1,0 +1,99 @@
+"""Event queue: vectorised insert/deliver invariants (+ hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import events as ev
+
+
+def test_insert_and_deliver_roundtrip():
+    eq = ev.make_queue(4, 8)
+    tgt = jnp.array([0, 0, 1, 3], jnp.int32)
+    t = jnp.array([1.0, 0.5, 2.0, 0.1])
+    wa = jnp.array([0.1, 0.2, 0.3, 0.4])
+    wg = jnp.zeros(4)
+    eq = ev.insert(eq, tgt, t, wa, wg, jnp.ones(4, bool))
+    assert int(eq.dropped) == 0
+    nt = ev.next_time(eq)
+    np.testing.assert_allclose(np.asarray(nt), [0.5, 2.0, np.inf, 0.1])
+    # deliver everything due by t=1.0 for neuron 0 only
+    eq, da, dg, cnt = ev.deliver_until(eq, jnp.array([1.0, 0.0, 0.0, 0.0]))
+    assert float(da[0]) == pytest.approx(0.3)       # both neuron-0 events
+    assert int(cnt[0]) == 2 and int(cnt[1]) == 0
+    assert float(ev.next_time(eq)[0]) == np.inf
+
+
+def test_overflow_detected_not_silent():
+    eq = ev.make_queue(2, 2)
+    tgt = jnp.zeros(5, jnp.int32)
+    t = jnp.arange(5) * 1.0
+    eq = ev.insert(eq, tgt, t, t, t, jnp.ones(5, bool))
+    assert int(eq.dropped) == 3
+
+
+def test_invalid_events_ignored():
+    eq = ev.make_queue(2, 4)
+    tgt = jnp.array([0, 1], jnp.int32)
+    eq = ev.insert(eq, tgt, jnp.ones(2), jnp.ones(2), jnp.zeros(2),
+                   jnp.array([True, False]))
+    assert np.isinf(np.asarray(eq.t)[1]).all()
+    assert not np.isinf(np.asarray(eq.t)[0]).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7),
+                          st.floats(0.01, 100.0, allow_nan=False)),
+                min_size=1, max_size=32))
+def test_no_event_lost_property(evs):
+    """Hypothesis: every valid inserted event is delivered exactly once,
+    with its exact weight, provided capacity suffices."""
+    n, cap = 8, 64
+    eq = ev.make_queue(n, cap)
+    tgt = jnp.array([e[0] for e in evs], jnp.int32)
+    t = jnp.array([e[1] for e in evs])
+    wa = jnp.ones(len(evs))
+    eq = ev.insert(eq, tgt, t, wa, jnp.zeros(len(evs)), jnp.ones(len(evs), bool))
+    assert int(eq.dropped) == 0
+    eq, da, _, cnt = ev.deliver_until(eq, jnp.full((n,), 1e9))
+    per_target = np.zeros(n)
+    for tg, _ in evs:
+        per_target[tg] += 1.0
+    np.testing.assert_allclose(np.asarray(da), per_target)
+    assert int(cnt.sum()) == len(evs)
+    assert np.isinf(np.asarray(eq.t)).all()         # queue fully drained
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_partial_delivery_order_property(seed):
+    """Delivering up to t only pops events <= t; later events remain."""
+    rng = np.random.default_rng(seed)
+    n, cap, E = 4, 32, 20
+    eq = ev.make_queue(n, cap)
+    tgt = jnp.asarray(rng.integers(0, n, E), jnp.int32)
+    t = jnp.asarray(rng.uniform(0, 10, E))
+    eq = ev.insert(eq, tgt, t, jnp.ones(E), jnp.zeros(E), jnp.ones(E, bool))
+    cut = float(rng.uniform(0, 10))
+    eq2, da, _, cnt = ev.deliver_until(eq, jnp.full((n,), cut))
+    expect = np.zeros(n)
+    for tg, tt in zip(np.asarray(tgt), np.asarray(t)):
+        if tt <= cut:
+            expect[tg] += 1
+    np.testing.assert_allclose(np.asarray(da), expect)
+    remaining = np.asarray(eq2.t)
+    assert (remaining[np.isfinite(remaining)] > cut).all()
+
+
+def test_spike_record():
+    rec = ev.make_spike_record(3, capacity=2)
+    rec = ev.record_spikes(rec, jnp.arange(3), jnp.array([1.0, 2.0, 3.0]),
+                           jnp.array([True, False, True]))
+    assert list(np.asarray(rec.count)) == [1, 0, 1]
+    rec = ev.record_spikes(rec, jnp.arange(3), jnp.array([4.0, 5.0, 6.0]),
+                           jnp.array([True, True, True]))
+    rec = ev.record_spikes(rec, jnp.arange(3), jnp.array([7.0, 8.0, 9.0]),
+                           jnp.array([True, False, False]))
+    assert int(rec.overflow) == 1                   # neuron 0 hit capacity
+    assert list(np.asarray(rec.count)) == [2, 1, 2]

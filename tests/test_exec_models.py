@@ -1,0 +1,114 @@
+"""Cross-validation of the four execution models (the paper's Fig. 1):
+identical physics -> BSP-fixed and FAP-fixed agree EXACTLY; the vardt
+models agree with each other and with fixed-step to discretisation error."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import bdf, morphology, network
+from repro.core import exec_bsp, exec_fap
+from repro.core.cell import CellModel
+
+T_END = 30.0
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = CellModel(morphology.soma_only())
+    net = network.make_network(16, k_in=6, seed=3)
+    rng = np.random.default_rng(1)
+    iinj = 0.16 + 0.004 * rng.standard_normal(16)
+    return model, net, iinj
+
+
+def _trains(res):
+    ts = np.asarray(res.rec.times)
+    c = np.asarray(res.rec.count)
+    return [np.sort(ts[i][: c[i]]) for i in range(len(c))]
+
+
+@pytest.fixture(scope="module")
+def results(setup):
+    model, net, iinj = setup
+    r_bspf = exec_bsp.run_bsp_fixed(model, net, iinj, T_END, method="cnexp")
+    r_fapf = exec_fap.run_fap_fixed(model, net, iinj, T_END, method="cnexp")
+    r_bspv = exec_bsp.run_bsp_vardt(model, net, iinj, T_END)
+    r_fapv = exec_fap.run_fap_vardt(model, net, iinj, T_END)
+    return r_bspf, r_fapf, r_bspv, r_fapv
+
+
+def test_no_failures_no_drops(results):
+    for r in results:
+        assert int(r.dropped) == 0
+        assert not bool(r.failed)
+        assert int(r.rec.overflow) == 0
+
+
+def test_bsp_fixed_equals_fap_fixed_exactly(results):
+    r_bspf, r_fapf = results[0], results[1]
+    t1, t2 = _trains(r_bspf), _trains(r_fapf)
+    for a, b in zip(t1, t2):
+        np.testing.assert_allclose(a, b, atol=1e-9)
+    assert int(r_bspf.n_events) == int(r_fapf.n_events)
+
+
+def test_vardt_models_agree(results):
+    r_bspv, r_fapv = results[2], results[3]
+    t3, t4 = _trains(r_bspv), _trains(r_fapv)
+    # different step sequences -> tiny numeric divergence; neurons at the
+    # spike/no-spike boundary may flip (chaotic near-threshold dynamics).
+    mismatched = sum(len(a) != len(b) for a, b in zip(t3, t4))
+    assert mismatched <= 2
+    for a, b in zip(t3, t4):
+        if len(a) == len(b) and len(a):
+            assert np.abs(a - b).max() < 0.25       # ms
+    tot3 = sum(len(a) for a in t3)
+    tot4 = sum(len(b) for b in t4)
+    assert abs(tot3 - tot4) <= max(2, 0.05 * tot3)
+
+
+def test_vardt_matches_fixed_physics(results):
+    t1, t4 = _trains(results[0]), _trains(results[3])
+    n_sp_fixed = sum(len(a) for a in t1)
+    n_sp_vardt = sum(len(a) for a in t4)
+    assert n_sp_fixed > 10                          # network actually active
+    assert abs(n_sp_fixed - n_sp_vardt) <= max(2, 0.1 * n_sp_fixed)
+
+
+def test_event_grouping_reduces_resets(setup):
+    """Paper §4.2: EG variants trade delivery precision for fewer IVP
+    resets; spike counts stay comparable."""
+    model, net, iinj = setup
+    r_precise = exec_fap.run_fap_vardt(model, net, iinj, T_END, eg_window=0.0)
+    r_eg = exec_fap.run_fap_vardt(model, net, iinj, T_END, eg_window=0.025)
+    assert int(r_eg.n_resets) <= int(r_precise.n_resets)
+    n1 = int(r_precise.rec.count.sum())
+    n2 = int(r_eg.rec.count.sum())
+    assert abs(n1 - n2) <= max(2, 0.15 * n1)
+
+
+def test_fap_vardt_fewer_steps_than_bsp_vardt_quiet(setup):
+    """The paper's core claim: without the BSP window clamp, quiet neurons
+    take far fewer (longer) steps."""
+    model, net, _ = setup
+    iinj = np.zeros(net.n)                          # fully quiet network
+    r_bspv = exec_bsp.run_bsp_vardt(model, net, iinj, T_END)
+    r_fapv = exec_fap.run_fap_vardt(model, net, iinj, T_END)
+    assert int(r_fapv.n_steps) < int(r_bspv.n_steps) / 2
+    assert int(r_fapv.rec.count.sum()) == 0 == int(r_bspv.rec.count.sum())
+
+
+def test_scheduler_k_select_equivalence(setup):
+    """Restricting each round to the K earliest neurons (the explicit
+    scheduler) must not change the computed physics: same spike counts up
+    to near-threshold flips, matched spikes within step tolerance (the
+    horizon sequence differs, so step sizes and rounding differ)."""
+    model, net, iinj = setup
+    r_all = exec_fap.run_fap_vardt(model, net, iinj, 15.0)
+    r_k = exec_fap.run_fap_vardt(model, net, iinj, 15.0, k_select=4)
+    ta, tk = _trains(r_all), _trains(r_k)
+    mismatched = sum(len(a) != len(b) for a, b in zip(ta, tk))
+    assert mismatched <= 1
+    for a, b in zip(ta, tk):
+        if len(a) == len(b) and len(a):
+            assert np.abs(a - b).max() < 0.25

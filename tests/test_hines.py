@@ -1,0 +1,59 @@
+"""Hines tree solve: exactness vs dense linear algebra, across morphologies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import morphology
+from repro.core.hines import dense_tree_matrix, hines_assemble, hines_solve
+
+MORPHS = {
+    "soma": morphology.soma_only(),
+    "ball_and_stick": morphology.ball_and_stick(n_dend=7),
+    "branched2": morphology.branched_tree(depth=2, seg_per_branch=2),
+    "branched3": morphology.branched_tree(depth=3, seg_per_branch=3),
+}
+
+
+@pytest.mark.parametrize("name", sorted(MORPHS))
+def test_hines_matches_dense(name):
+    m = MORPHS[name]
+    parent = jnp.asarray(m.parent)
+    gax = jnp.asarray(m.g_axial)
+    key = jax.random.PRNGKey(hash(name) % 2**31)
+    diag_extra = jax.random.uniform(key, (m.n_comp,)) + 0.5
+    b = jax.random.normal(key, (m.n_comp,))
+    d = hines_assemble(parent, gax, diag_extra)
+    x = hines_solve(parent, gax, d, b)
+    A = dense_tree_matrix(parent, gax, diag_extra)
+    x_ref = jnp.linalg.solve(A, b)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_ref),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_hines_order_property():
+    for m in MORPHS.values():
+        assert m.parent[0] == -1
+        assert np.all(m.parent[1:] < np.arange(1, m.n_comp))
+        assert m.g_axial[0] == 0.0
+        assert np.all(m.g_axial[1:] > 0.0)
+
+
+def test_random_trees_match_dense():
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        C = int(rng.integers(2, 40))
+        parent = np.full(C, -1, np.int32)
+        for i in range(1, C):
+            parent[i] = rng.integers(0, i)
+        gax = np.concatenate([[0.0], rng.uniform(0.01, 1.0, C - 1)])
+        diag_extra = rng.uniform(0.5, 2.0, C)
+        b = rng.normal(size=C)
+        d = hines_assemble(jnp.asarray(parent), jnp.asarray(gax),
+                           jnp.asarray(diag_extra))
+        x = hines_solve(jnp.asarray(parent), jnp.asarray(gax), d,
+                        jnp.asarray(b))
+        A = dense_tree_matrix(jnp.asarray(parent), jnp.asarray(gax),
+                              jnp.asarray(diag_extra))
+        x_ref = np.linalg.solve(np.asarray(A), b)
+        np.testing.assert_allclose(np.asarray(x), x_ref, rtol=1e-9, atol=1e-11)

@@ -1,0 +1,104 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (shapes x dtypes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import morphology
+from repro.core.hines import hines_assemble
+
+# ---------------------------------------------------------------- hines ----
+from repro.kernels.hines.ops import hines_solve_batched
+from repro.kernels.hines.ref import dense_solve_ref, hines_solve_ref
+
+HINES_CASES = [
+    ("soma", morphology.soma_only(), 1),
+    ("bs", morphology.ball_and_stick(5), 33),
+    ("br2", morphology.branched_tree(2, 2), 256),
+    ("br3", morphology.branched_tree(3, 2), 300),
+]
+
+
+@pytest.mark.parametrize("name,m,N", HINES_CASES)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float64, 1e-12), (jnp.float32, 2e-4)])
+def test_hines_kernel_sweep(name, m, N, dtype, tol):
+    key = jax.random.PRNGKey(len(name) + N)
+    parent = jnp.asarray(m.parent)
+    gax = jnp.asarray(m.g_axial, dtype)
+    de = jax.random.uniform(key, (N, m.n_comp), dtype) + 0.5
+    d = jax.vmap(lambda x: hines_assemble(parent, gax, x))(de).T
+    b = jax.random.normal(key, (m.n_comp, N), dtype)
+    x_k = hines_solve_batched(parent, gax, d, b, block_n=128)
+    x_r = hines_solve_ref(parent, gax.astype(jnp.float64),
+                          d.astype(jnp.float64), b.astype(jnp.float64))
+    np.testing.assert_allclose(np.asarray(x_k, np.float64), np.asarray(x_r),
+                               rtol=tol, atol=tol)
+
+
+def test_hines_kernel_vs_dense_oracle():
+    m = morphology.branched_tree(2, 3)
+    key = jax.random.PRNGKey(0)
+    parent, gax = jnp.asarray(m.parent), jnp.asarray(m.g_axial)
+    de = jax.random.uniform(key, (64, m.n_comp)) + 0.5
+    d = jax.vmap(lambda x: hines_assemble(parent, gax, x))(de).T
+    b = jax.random.normal(key, (m.n_comp, 64))
+    np.testing.assert_allclose(
+        np.asarray(hines_solve_batched(parent, gax, d, b)),
+        np.asarray(dense_solve_ref(parent, gax, d, b)), rtol=1e-9, atol=1e-11)
+
+
+# --------------------------------------------------------------- hh_rhs ----
+from repro.kernels.hh_rhs.ops import hh_rhs_batched
+from repro.kernels.hh_rhs.ref import hh_rhs_ref
+
+
+@pytest.mark.parametrize("N,C", [(1, 1), (7, 13), (256, 29), (300, 8)])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float64, 1e-12), (jnp.float32, 1e-4)])
+def test_hh_rhs_kernel_sweep(N, C, dtype, tol):
+    key = jax.random.PRNGKey(N * C)
+    area = jax.random.uniform(key, (C,), dtype) * 1000 + 50
+    v = jax.random.uniform(key, (N, C), dtype) * 120 - 90
+    gates = [jax.random.uniform(jax.random.fold_in(key, i), (N, C), dtype)
+             for i in range(3)]
+    outs_k = hh_rhs_batched(area, v, *gates, block_n=128)
+    outs_r = hh_rhs_ref(area.astype(jnp.float64), v.astype(jnp.float64),
+                        *[g.astype(jnp.float64) for g in gates])
+    for a, b in zip(outs_k, outs_r):
+        np.testing.assert_allclose(np.asarray(a, np.float64), np.asarray(b),
+                                   rtol=tol, atol=tol * 10)
+
+
+# ------------------------------------------------------------ attention ----
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import attention_ref
+
+ATTN_CASES = [
+    (1, 4, 4, 64, 64, 32, True),
+    (2, 8, 2, 128, 128, 64, True),      # GQA
+    (1, 4, 4, 1, 128, 64, True),        # decode
+    (2, 6, 3, 37, 100, 16, True),       # ragged + GQA
+    (1, 4, 2, 64, 64, 32, False),       # bidirectional
+]
+
+
+@pytest.mark.parametrize("B,H,Hkv,Sq,Skv,D,causal", ATTN_CASES)
+def test_flash_attention_sweep(B, H, Hkv, Sq, Skv, D, causal):
+    ks = jax.random.split(jax.random.PRNGKey(B * Sq + Skv), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, Skv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, Skv, D), jnp.float32)
+    o_k = flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    o_r = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_size_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, 96, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 96, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 96, 32), jnp.float32)
+    o1 = flash_attention(q, k, v, bq=32, bk=32)
+    o2 = flash_attention(q, k, v, bq=96, bk=48)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)

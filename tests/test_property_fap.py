@@ -1,0 +1,88 @@
+"""Property-based tests (hypothesis) of the FAP execution model's invariants:
+
+  1. conservative-lookahead progress: with all delays >= min_delay > 0, the
+     earliest neuron's horizon strictly exceeds its clock (no deadlock),
+  2. the non-speculative guarantee: every event is delivered at a receiver
+     clock <= its delivery time (never in the receiver's past),
+  3. event conservation: delivered + pending == emitted * fan-out.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import exec_common as xc
+from repro.core import network
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 24), st.integers(1, 6))
+def test_horizon_progress_no_deadlock(seed, n, k):
+    net = network.make_network(n, k_in=min(k, n - 1), seed=seed)
+    dnet = xc.to_device(net)
+    rng = np.random.default_rng(seed)
+    t_clock = jnp.asarray(rng.uniform(0.0, 5.0, n))
+    horizon = xc.horizon_times(dnet, n, t_clock, t_end=1e9)
+    tmin_idx = int(np.argmin(np.asarray(t_clock)))
+    # the globally earliest neuron can ALWAYS advance by >= min_delay
+    assert float(horizon[tmin_idx]) >= float(t_clock[tmin_idx]) + net.min_delay - 1e-12
+    assert net.min_delay >= network.MIN_DELAY - 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_nonspeculative_event_delivery(seed):
+    """Events produced by a FAP round are never earlier than the receiving
+    neuron's horizon at emission time (paper §2.4's no-backstepping
+    invariant), by the argument in exec_fap's module docstring."""
+    n, k = 12, 4
+    net = network.make_network(n, k_in=k, seed=seed)
+    dnet = xc.to_device(net)
+    rng = np.random.default_rng(seed)
+    t_clock = jnp.asarray(rng.uniform(0.0, 3.0, n))
+    horizon = xc.horizon_times(dnet, n, t_clock, t_end=1e9)
+    # a RUNNABLE neuron spikes somewhere inside its (clock, horizon] window.
+    # (in reachable states t <= horizon — horizons are monotone in the pre
+    # clocks — so only runnable neurons, horizon > clock, may spike)
+    frac = rng.uniform(0.1, 1.0, n)
+    gap = np.maximum(np.asarray(horizon) - np.asarray(t_clock), 0.0)
+    t_spike = np.asarray(t_clock) + frac * gap
+    spiked = (rng.random(n) < 0.5) & (gap > 0)
+    tgt, t_ev, wa, wg, valid = xc.fanout(dnet, jnp.asarray(spiked),
+                                         jnp.asarray(t_spike))
+    t_ev, tgt, valid = map(np.asarray, (t_ev, tgt, valid))
+    # the receiver can have advanced AT MOST to horizon[tgt] this round, and
+    # horizon[tgt] <= t_clock_old[pre] + delay(e) < t_spike(pre) + delay(e)
+    # = t_ev  — so no event ever lands in a receiver's past.
+    receiver_horizon = np.asarray(horizon)[tgt]
+    ok = t_ev[valid] >= receiver_horizon[valid] - 1e-9
+    assert ok.all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 10))
+def test_fanout_conservation(seed, n):
+    net = network.make_network(n, k_in=2, seed=seed)
+    dnet = xc.to_device(net)
+    rng = np.random.default_rng(seed)
+    spiked = rng.random(n) < 0.5
+    t_spike = rng.uniform(0, 1, n)
+    tgt, t_ev, wa, wg, valid = xc.fanout(dnet, jnp.asarray(spiked),
+                                         jnp.asarray(t_spike))
+    # each spiking neuron emits exactly out-degree events
+    out_deg = np.bincount(np.asarray(net.pre), minlength=n)
+    assert int(np.asarray(valid).sum()) == int(out_deg[spiked].sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_delay_distribution_matches_paper(seed):
+    """Fig. 3 shape: all delays in [0.1, 7] ms, mode well above the min,
+    only a tiny fraction at the BSP communication interval."""
+    net = network.make_network(256, k_in=16, seed=seed)
+    d = net.delay
+    assert d.min() >= network.MIN_DELAY - 1e-12
+    assert d.max() <= network.MAX_DELAY + 1e-12
+    frac_at_min = (d <= network.MIN_DELAY + 0.05).mean()
+    assert frac_at_min < 0.15
+    assert np.median(d) > 3 * network.MIN_DELAY

@@ -1,0 +1,72 @@
+"""Carefully-speculative FAP (the paper's §Discussion future-work proposal):
+physics must match the non-speculative method; quiet networks must validate
+nearly all speculation; active networks must pay only local discarded work
+(no event is ever retracted — the cascade cannot start, by construction)."""
+import numpy as np
+import pytest
+
+from repro.core import exec_fap, exec_speculative, morphology, network
+from repro.core.cell import CellModel
+
+T = 40.0
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = CellModel(morphology.soma_only())
+    net = network.make_network(16, k_in=4, seed=5)
+    return model, net
+
+
+def _trains(res):
+    ts = np.asarray(res.rec.times)
+    c = np.asarray(res.rec.count)
+    return [np.sort(ts[i][: c[i]]) for i in range(len(c))]
+
+
+def test_quiet_speculation_validates_and_extends_steps(setup):
+    model, net = setup
+    iinj = np.zeros(net.n)
+    run = exec_speculative.make_spec_runner(model, net, iinj, T,
+                                            spec_window=4.0)
+    res, stats, rounds = run()
+    assert not bool(res.failed)
+    assert int(stats.backsteps) == 0              # nothing to invalidate
+    assert int(stats.hits) > 0                    # speculation engaged
+    # fewer validated steps than the non-speculative run (longer spans)
+    r_ns = exec_fap.run_fap_vardt(model, net, iinj, T)
+    assert int(res.n_steps) < int(r_ns.n_steps)
+
+
+def test_active_network_matches_nonspeculative_physics(setup):
+    model, net = setup
+    rng = np.random.default_rng(2)
+    iinj = 0.16 + 0.004 * rng.standard_normal(net.n)
+    run = exec_speculative.make_spec_runner(model, net, iinj, T)
+    res, stats, rounds = run()
+    assert not bool(res.failed)
+    assert int(res.dropped) == 0
+    r_ns = exec_fap.run_fap_vardt(model, net, iinj, T)
+    ta, tb = _trains(res), _trains(r_ns)
+    mismatched = sum(len(a) != len(b) for a, b in zip(ta, tb))
+    assert mismatched <= 2                        # near-threshold flips only
+    for a, b in zip(ta, tb):
+        if len(a) == len(b) and len(a):
+            assert np.abs(a - b).max() < 0.25
+    tot_a, tot_b = sum(map(len, ta)), sum(map(len, tb))
+    assert abs(tot_a - tot_b) <= max(2, 0.1 * tot_b)
+
+
+def test_backsteps_are_local_and_counted(setup):
+    """With events flying, some speculation must be discarded — and the
+    counter proves the mechanism exercised; no queue overflow / retraction
+    pathway exists by construction."""
+    model, net = setup
+    rng = np.random.default_rng(3)
+    iinj = 0.17 + 0.004 * rng.standard_normal(net.n)
+    run = exec_speculative.make_spec_runner(model, net, iinj, T,
+                                            spec_window=4.0)
+    res, stats, rounds = run()
+    assert not bool(res.failed)
+    assert int(stats.backsteps) + int(stats.hits) > 0
+    assert int(stats.wasted_steps) >= int(stats.backsteps)

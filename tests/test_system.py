@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the paper's system: full launcher runs,
+serving loop, and the paper's headline qualitative claims at test scale."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(args, timeout=560):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    return subprocess.run([sys.executable, "-m"] + args, env=env, cwd=ROOT,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_launcher_end_to_end(tmp_path):
+    res = _run(["repro.launch.train", "--arch", "smollm-135m", "--reduced",
+                "--steps", "25", "--batch", "4", "--seq", "64",
+                "--ckpt-dir", str(tmp_path), "--save-every", "10"])
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "done: steps=25" in res.stdout
+    first = float(res.stdout.split("loss ")[-1].split(" ->")[0])
+    last = float(res.stdout.strip().split("-> ")[-1])
+    assert last < first
+    # checkpoints exist and resume works
+    res2 = _run(["repro.launch.train", "--arch", "smollm-135m", "--reduced",
+                 "--steps", "30", "--batch", "4", "--seq", "64",
+                 "--ckpt-dir", str(tmp_path), "--save-every", "10"])
+    assert res2.returncode == 0, res2.stderr[-2000:]
+    assert "start_step=25" in res2.stdout
+
+
+def test_train_launcher_failure_injection_and_resume(tmp_path):
+    res = _run(["repro.launch.train", "--arch", "smollm-135m", "--reduced",
+                "--steps", "20", "--batch", "2", "--seq", "32",
+                "--ckpt-dir", str(tmp_path), "--save-every", "5",
+                "--inject-failure-at", "12"])
+    assert res.returncode == 75                     # preempted
+    res2 = _run(["repro.launch.train", "--arch", "smollm-135m", "--reduced",
+                 "--steps", "20", "--batch", "2", "--seq", "32",
+                 "--ckpt-dir", str(tmp_path), "--save-every", "5"])
+    assert res2.returncode == 0, res2.stderr[-2000:]
+    assert "start_step=10" in res2.stdout           # resumed from last save
+
+
+def test_serve_launcher(tmp_path):
+    res = _run(["repro.launch.serve", "--arch", "smollm-135m", "--reduced",
+                "--requests", "4", "--slots", "2", "--max-new", "4",
+                "--cache-len", "64"])
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "served 4 requests" in res.stdout
+
+
+def test_paper_headline_claim_quiet_speedup():
+    """The paper's central result at test scale: for quiet dynamics the FAP
+    variable-step method takes far fewer interpolation steps than the
+    reference fixed-step method (544-65x in the paper at scale; we assert
+    the step-count mechanism, which wall-clock follows on real hardware)."""
+    from repro.core import exec_bsp, exec_fap, morphology, network
+    from repro.core.cell import CellModel
+    model = CellModel(morphology.soma_only())
+    net = network.make_network(24, k_in=4, seed=0)
+    iinj = np.zeros(24)                             # quiet regime
+    T = 50.0
+    r_fixed = exec_bsp.run_bsp_fixed(model, net, iinj, T,
+                                     method="derivimplicit")
+    r_fap = exec_fap.run_fap_vardt(model, net, iinj, T)
+    assert not bool(r_fap.failed)
+    ratio = int(r_fixed.n_steps) / max(int(r_fap.n_steps), 1)
+    assert ratio > 10, f"step reduction only {ratio:.1f}x"
