@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# One-shot local gate: the tier-1 test command (ROADMAP.md) plus a quick
+# smoke of the event-wheel microbenchmark (sort-free insert + equivalence
+# checks run inside it).  Usage: scripts/check.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q "$@"
+
+echo "== event-wheel bench smoke (REPRO_BENCH_QUICK=1) =="
+REPRO_BENCH_QUICK=1 python -c "from benchmarks import event_wheel; event_wheel.run()"
+
+echo "check.sh: all green"

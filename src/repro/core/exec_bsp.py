@@ -19,6 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import sched
 from repro.core import bdf
 from repro.core import events as ev
 from repro.core import exec_common as xc
@@ -42,9 +43,13 @@ class RunResult(NamedTuple):
 
 def make_bsp_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
                           method: str = "cnexp", dt: float = 0.025,
-                          window: float = 0.1, ev_cap: int = EV_CAP):
+                          window: float = 0.1, ev_cap: int = EV_CAP,
+                          queue: str = "dense",
+                          wheel: sched.WheelSpec = sched.WheelSpec()):
     n = net.n
     dnet = xc.to_device(net)
+    qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
+    qinsert = sched.edge_insert(qops, net)
     steps_w = max(1, int(round(window / dt)))
     n_windows = int(math.ceil(t_end / (steps_w * dt)))
     step = make_stepper(model, method, dt)
@@ -59,7 +64,7 @@ def make_bsp_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
             Y, eq, rec, n_ev = c
             t_j = t0 + j * dt
             # deliver all events due by this step boundary (fixed-step grid)
-            eq, wa, wg, cnt = ev.deliver_until(eq, jnp.full((n,), t_j + dt))
+            eq, wa, wg, cnt = qops.deliver_until(eq, jnp.full((n,), t_j + dt))
             Y = jax.vmap(model.apply_event)(Y, wa, wg)
             v_prev = Y[:, model.idx_vsoma]
             Y = vstep(Y, iinj)
@@ -74,13 +79,13 @@ def make_bsp_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
         spiked_w = spk.any(axis=0)
         t_spike_w = jnp.where(spk, tsp, 0.0).sum(axis=0)
         tgt, t_ev, wa, wg, valid = xc.fanout(dnet, spiked_w, t_spike_w)
-        eq = ev.insert(eq, tgt, t_ev, wa, wg, valid)
+        eq = qinsert(eq, tgt, t_ev, wa, wg, valid)
         return (Y, eq, rec, n_ev), None
 
     @jax.jit
     def run():
         Y = xc.batch_init(model, n)
-        eq = ev.make_queue(n, ev_cap)
+        eq = qops.make(n)
         rec = ev.make_spike_record(n, SPK_CAP)
         (Y, eq, rec, n_ev), _ = jax.lax.scan(
             window_body, (Y, eq, rec, jnp.zeros((), jnp.int32)),
@@ -155,10 +160,14 @@ def make_vardt_advance(model: CellModel, opts: bdf.BDFOptions,
 def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                           opts: bdf.BDFOptions = bdf.BDFOptions(),
                           eg_window: float = 0.0, window: float = 0.1,
-                          step_budget: int = 8, ev_cap: int = EV_CAP):
+                          step_budget: int = 8, ev_cap: int = EV_CAP,
+                          queue: str = "dense",
+                          wheel: sched.WheelSpec = sched.WheelSpec()):
     """Method 2b: CVODE under BSP — barrier at every communication window."""
     n = net.n
     dnet = xc.to_device(net)
+    qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
+    qinsert = sched.edge_insert(qops, net)
     n_windows = int(math.ceil(t_end / window))
     iinj = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
     advance = make_vardt_advance(model, opts, eg_window, step_budget)
@@ -174,14 +183,14 @@ def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
         eq = eq._replace(t=eq_t)
         rec = ev.record_spikes(rec, jnp.arange(n), t_sp, spiked)
         tgt, t_ev, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
-        eq = ev.insert(eq, tgt, t_ev, wa, wg, valid)
+        eq = qinsert(eq, tgt, t_ev, wa, wg, valid)
         return (sts, eq, rec, n_ev + nd.sum(dtype=jnp.int32), n_rs + nrs.sum(dtype=jnp.int32)), None
 
     @jax.jit
     def run():
         Y = xc.batch_init(model, n)
         sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj)
-        eq = ev.make_queue(n, ev_cap)
+        eq = qops.make(n)
         rec = ev.make_spike_record(n, SPK_CAP)
         (sts, eq, rec, n_ev, n_rs), _ = jax.lax.scan(
             window_body,

@@ -30,6 +30,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import sched
 from repro.core import bdf
 from repro.core import events as ev
 from repro.core import exec_common as xc
@@ -37,15 +38,19 @@ from repro.core.cell import CellModel
 from repro.core.exec_bsp import EV_CAP, SPK_CAP, RunResult, make_vardt_advance
 from repro.core.fixed_step import make_stepper
 from repro.core.network import Network
+from repro.kernels.event_wheel import ops as ew_ops
 
 
 def make_fap_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
                           method: str = "cnexp", dt: float = 0.025,
                           round_cap_steps: int = 16, ev_cap: int = EV_CAP,
-                          max_rounds: int = 2_000_000):
+                          max_rounds: int = 2_000_000, queue: str = "dense",
+                          wheel: sched.WheelSpec = sched.WheelSpec()):
     """Fixed-step FAP (method 1c).  Returns a nullary jitted runner."""
     n = net.n
     dnet = xc.to_device(net)
+    qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
+    qinsert = sched.edge_insert(qops, net)
     step = make_stepper(model, method, dt)
     vstep = jax.vmap(step)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
@@ -65,7 +70,7 @@ def make_fap_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
             Y, k, eq, rec, n_ev, n_st, spiked_r, t_sp_r = c
             act = j < n_adv
             t_j = k * dt
-            eq2, wa, wg, cnt = ev.deliver_until(eq, jnp.where(act, t_j + dt, -jnp.inf))
+            eq2, wa, wg, cnt = qops.deliver_until(eq, jnp.where(act, t_j + dt, -jnp.inf))
             Y2 = jax.vmap(model.apply_event)(Y, wa, wg)
             v_prev = Y2[:, model.idx_vsoma]
             Y2 = vstep(Y2, iinj_v)
@@ -82,7 +87,7 @@ def make_fap_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
             0, round_cap_steps, inner,
             (Y, k, eq, rec, n_ev, n_st, spiked_r, t_sp_r))
         tgt, t_evs, wa, wg, valid = xc.fanout(dnet, spiked_r, t_sp_r)
-        eq = ev.insert(eq, tgt, t_evs, wa, wg, valid)
+        eq = qinsert(eq, tgt, t_evs, wa, wg, valid)
         return Y, k, eq, rec, n_ev, n_st, rounds + 1
 
     def cond(carry):
@@ -92,7 +97,7 @@ def make_fap_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
     @jax.jit
     def run():
         Y = xc.batch_init(model, n)
-        eq = ev.make_queue(n, ev_cap)
+        eq = qops.make(n)
         rec = ev.make_spike_record(n, SPK_CAP)
         z = jnp.zeros((), jnp.int32)
         Y, k, eq, rec, n_ev, n_st, rounds = jax.lax.while_loop(
@@ -107,7 +112,11 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                           opts: bdf.BDFOptions = bdf.BDFOptions(),
                           eg_window: float = 0.0, horizon_cap: float = 2.0,
                           k_select: int = 0, step_budget: int = 12,
-                          ev_cap: int = EV_CAP, max_rounds: int = 1_000_000):
+                          ev_cap: int = EV_CAP, max_rounds: int = 1_000_000,
+                          queue: str = "dense",
+                          wheel: sched.WheelSpec = sched.WheelSpec(),
+                          select: str = "sort", horizon_impl: str = "scatter",
+                          n_bisect: int = 48):
     """Variable-step FAP (method 2c, the paper's reference method).
 
     eg_window: 0 -> precise delivery (2c-);  dt/2 or dt -> grouped variants.
@@ -115,20 +124,47 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                the K earliest (the explicit scheduler of paper §2.4).
     horizon_cap bounds per-round advancement (ms) so one spike per neuron per
     round is guaranteed (ISI >> cap at all five regimes).
+    queue:        "dense" (argsort slot queue) or "wheel" (bucketed event
+                  wheel, O(E) scatter insert — repro.sched).
+    select:       "sort" (kth via jnp.sort) or "threshold" (bisection on
+                  counts — no sort primitive in the round's jaxpr).
+    horizon_impl: "scatter" (edge scatter-min) or "fused" (Pallas kernel
+                  over the static by-post layout — kernels/event_wheel).
     """
     n = net.n
     dnet = xc.to_device(net)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
     advance = make_vardt_advance(model, opts, eg_window, step_budget)
     vadvance = jax.vmap(advance)
+    qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
+    qinsert = sched.edge_insert(qops, net)
+    if select not in ("sort", "threshold"):
+        raise ValueError(f"unknown select {select!r}")
+    if horizon_impl == "fused":
+        pre_byk, delay_byk = ew_ops.by_post_layout(net)
+    elif horizon_impl != "scatter":
+        raise ValueError(f"unknown horizon_impl {horizon_impl!r}")
 
     def round_body(carry):
         sts, eq, rec, n_ev, n_rs, rounds = carry
         t_clock = sts.t
-        horizon = xc.horizon_times(dnet, n, t_clock, t_end)
-        horizon = jnp.minimum(horizon, t_clock + horizon_cap)
-        runnable = t_clock < horizon - 1e-12
-        if k_select > 0:
+        if horizon_impl == "fused":
+            # fused kernel: min over in-edges + clamps + runnable (+ the
+            # earliest-K threshold when selection is sort-free too)
+            horizon, runnable = ew_ops.fused_horizon_select(
+                t_clock, pre_byk, delay_byk, t_end=t_end,
+                horizon_cap=horizon_cap, n_iters=n_bisect,
+                k_select=k_select if select == "threshold" else 0)
+        else:
+            horizon = xc.horizon_times(dnet, n, t_clock, t_end)
+            horizon = jnp.minimum(horizon, t_clock + horizon_cap)
+            runnable = t_clock < horizon - 1e-12
+            if k_select > 0 and select == "threshold":
+                score = jnp.where(runnable, t_clock, jnp.inf)
+                tau = ew_ops.select_threshold(score, k_select,
+                                              n_iters=n_bisect)
+                runnable = jnp.logical_and(runnable, score <= tau)
+        if k_select > 0 and select == "sort":
             # earliest-neuron-steps-next: keep only the K earliest runnable
             score = jnp.where(runnable, t_clock, jnp.inf)
             kth = jnp.sort(score)[min(k_select, n) - 1]
@@ -138,7 +174,7 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
         eq = eq._replace(t=eq_t)
         rec = ev.record_spikes(rec, jnp.arange(n), t_sp, spiked)
         tgt, t_evs, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
-        eq = ev.insert(eq, tgt, t_evs, wa, wg, valid)
+        eq = qinsert(eq, tgt, t_evs, wa, wg, valid)
         return sts, eq, rec, n_ev + nd.sum(dtype=jnp.int32), n_rs + nrs.sum(dtype=jnp.int32), rounds + 1
 
     def cond(carry):
@@ -151,7 +187,7 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
     def run():
         Y = xc.batch_init(model, n)
         sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj_v)
-        eq = ev.make_queue(n, ev_cap)
+        eq = qops.make(n)
         rec = ev.make_spike_record(n, SPK_CAP)
         z = jnp.zeros((), jnp.int32)
         sts, eq, rec, n_ev, n_rs, rounds = jax.lax.while_loop(

@@ -33,6 +33,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import sched
 from repro.core import bdf
 from repro.core import events as ev
 from repro.core import exec_common as xc
@@ -52,9 +53,12 @@ def make_spec_runner(model: CellModel, net: Network, iinj, t_end: float,
                      opts: bdf.BDFOptions = bdf.BDFOptions(),
                      horizon_cap: float = 2.0, spec_window: float = 2.0,
                      step_budget: int = 12, ev_cap: int = EV_CAP,
-                     max_rounds: int = 1_000_000):
+                     max_rounds: int = 1_000_000, queue: str = "dense",
+                     wheel: sched.WheelSpec = sched.WheelSpec()):
     n = net.n
     dnet = xc.to_device(net)
+    qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
+    qinsert = sched.edge_insert(qops, net)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
     advance = make_vardt_advance(model, opts, 0.0, step_budget)
     vadvance = jax.vmap(advance)
@@ -64,7 +68,7 @@ def make_spec_runner(model: CellModel, net: Network, iinj, t_end: float,
          rounds) = carry
         # ---- validation of last round's speculation ----------------------
         # an event due before the speculated clock invalidates the neuron
-        next_ev = ev.next_time(eq)
+        next_ev = qops.next_time(eq)
         invalid = jnp.logical_and(spec_on, next_ev < sts.t - 1e-12)
         valid = jnp.logical_and(spec_on, ~invalid)
         wasted = jnp.where(invalid, sts.nst - snap.nst, 0).sum(dtype=jnp.int32)
@@ -96,12 +100,12 @@ def make_spec_runner(model: CellModel, net: Network, iinj, t_end: float,
         all_tsp = jnp.where(emit_held, held_t, t_sp)
         rec = ev.record_spikes(rec, jnp.arange(n), all_tsp, all_spiked)
         tgt, t_evs, wa, wg, validm = xc.fanout(dnet, all_spiked, all_tsp)
-        eq = ev.insert(eq, tgt, t_evs, wa, wg, validm)
+        eq = qinsert(eq, tgt, t_evs, wa, wg, validm)
 
         # ---- speculative phase (hold spikes; nothing leaves the neuron) ---
         snap = sts
         spec_limit = jnp.minimum(horizon + spec_window, t_end)
-        next_ev2 = ev.next_time(eq)
+        next_ev2 = qops.next_time(eq)
         can_spec = jnp.logical_and(sts.t < spec_limit - 1e-12,
                                    next_ev2 > spec_limit)  # no known event due
         sts2, _, sp2, tsp2, _, _ = vadvance(
@@ -133,7 +137,7 @@ def make_spec_runner(model: CellModel, net: Network, iinj, t_end: float,
     def run():
         Y = xc.batch_init(model, n)
         sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj_v)
-        eq = ev.make_queue(n, ev_cap)
+        eq = qops.make(n)
         rec = ev.make_spike_record(n, SPK_CAP)
         z = jnp.zeros((), jnp.int32)
         stats = SpecStats(z, z, z, z)

@@ -26,8 +26,8 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import sched
 from repro.core import bdf
-from repro.core import events as ev
 from repro.core.cell import CellModel
 from repro.core.exec_bsp import make_vardt_advance
 
@@ -43,10 +43,12 @@ class PaperNeuroSpec(NamedTuple):
 
 def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
                     opts: bdf.BDFOptions = bdf.BDFOptions(),
-                    optimized: bool = False):
+                    optimized: bool = False, queue: str = "dense",
+                    wheel: sched.WheelSpec = sched.WheelSpec()):
     """optimized=False: paper-faithful baseline — horizon scatter-min and
-    event insert as *global* ops, lowered by GSPMD (collective-heavy: the
-    global argsort in the insert becomes a distributed sort).
+    event insert as *global* ops, lowered by GSPMD (collective-heavy: with
+    queue="dense" the global argsort in the insert becomes a distributed
+    sort; queue="wheel" already removes the sort from the global path).
 
     optimized=True (§Perf): the communication is exactly the paper's two
     notification channels and nothing else —
@@ -55,6 +57,8 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
     after which horizon computation and queue insertion run SHARD-LOCAL
     inside shard_map (edges are sharded by postsynaptic neuron, aligned
     with the neuron sharding, so no event ever crosses shards again).
+    With queue="wheel" the shard-local insert is the bucketed event-wheel
+    scatter (repro.sched) — no sort of any kind, local or distributed.
     """
     from functools import partial
 
@@ -67,6 +71,19 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
     vadvance = jax.vmap(advance)
     n_shards = int(np.prod([mesh.shape[a] for a in flat]))
     n_local = n // n_shards
+    qops = sched.get_queue_ops(queue, ev_cap=spec.ev_cap, wheel=wheel)
+    qcap = qops.capacity
+
+    def _insert_byk(eq_t, eq_a, eq_g, t_ev, wa, wg, valid):
+        """Grouped insert over the by-post edge layout (k_in per neuron);
+        row index is the (shard-relative) target neuron.  Only used on the
+        shard-local path, which already constructs post_rel as
+        repeat(arange, k_in) — i.e. the layout is guaranteed there."""
+        k = spec.k_in
+        eq = qops.wrap(eq_t, eq_a, eq_g, jnp.zeros((), jnp.int32))
+        eq = qops.insert_grouped(eq, t_ev.reshape(-1, k), wa.reshape(-1, k),
+                                 wg.reshape(-1, k), valid.reshape(-1, k))
+        return eq
 
     def _gather_axes(x):
         for ax in reversed(flat):
@@ -97,8 +114,7 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
         tsp_all = _gather_axes(t_sp)
         valid = spiked_all[pre_l]
         t_ev = tsp_all[pre_l] + delay_l
-        eq = ev.EventQueue(eq_t, eq_a, eq_g, jnp.zeros((), jnp.int32))
-        eq = ev.insert(eq, post_rel, t_ev, wa_l, wg_l, valid)
+        eq = _insert_byk(eq_t, eq_a, eq_g, t_ev, wa_l, wg_l, valid)
         nd = jax.lax.psum(nd.sum(), flat)
         nrs = jax.lax.psum(nrs.sum(), flat)
         return sts, eq.t, eq.w_ampa, eq.w_gaba, spiked, nd, nrs
@@ -125,8 +141,11 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
             sts, eq_t, eq_a, eq_g, horizon, runnable, iinj)
         valid = spiked[pre]
         t_ev = t_sp[pre] + delay
-        eq = ev.EventQueue(eq_t, eq_a, eq_g, jnp.zeros((), jnp.int32))
-        eq = ev.insert(eq, post, t_ev, w_a, w_g, valid)
+        # the global path honours the runtime `post` array (arbitrary edge
+        # order); both queue impls insert to explicit targets sort-free or
+        # not per their contract
+        eq = qops.wrap(eq_t, eq_a, eq_g, jnp.zeros((), jnp.int32))
+        eq = qops.insert(eq, post, t_ev, w_a, w_g, valid)
         return sts, eq.t, eq.w_ampa, eq.w_gaba, spiked, nd.sum(), nrs.sum()
 
     # ---- example args (ShapeDtypeStructs) and shardings -------------------
@@ -136,9 +155,9 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
             model, 0.0, model.init_state(), i, opts))(jnp.zeros((n,), f8)))
     args = (
         sts,
-        jax.ShapeDtypeStruct((n, spec.ev_cap), f8),    # eq_t
-        jax.ShapeDtypeStruct((n, spec.ev_cap), f8),    # eq_a
-        jax.ShapeDtypeStruct((n, spec.ev_cap), f8),    # eq_g
+        jax.ShapeDtypeStruct((n, qcap), f8),           # eq_t
+        jax.ShapeDtypeStruct((n, qcap), f8),           # eq_a
+        jax.ShapeDtypeStruct((n, qcap), f8),           # eq_g
         jax.ShapeDtypeStruct((E,), jnp.int32),         # pre
         jax.ShapeDtypeStruct((E,), jnp.int32),         # post
         jax.ShapeDtypeStruct((E,), f8),                # delay

@@ -6,10 +6,13 @@ Layout: one subpackage per kernel with
   ref.py     - pure-jnp oracle used by the allclose test sweeps
 
 Kernels:
-  hines     - batched Hines tree-tridiagonal solve (the per-Newton-iteration
-              linear solve; NEURON's core numeric kernel)
-  hh_rhs    - fused HH gating-rate + ionic-current evaluation (the CVODE f)
-  attention - flash attention (causal/GQA) for the LM architecture zoo
+  hines       - batched Hines tree-tridiagonal solve (the per-Newton-iteration
+                linear solve; NEURON's core numeric kernel)
+  hh_rhs      - fused HH gating-rate + ionic-current evaluation (the CVODE f)
+  attention   - flash attention (causal/GQA) for the LM architecture zoo
+  event_wheel - fused FAP horizon min-reduce + runnable mask + sort-free
+                earliest-K selection (the scheduler round's notification half;
+                pairs with the repro.sched event-wheel queue)
 """
 
 import jax

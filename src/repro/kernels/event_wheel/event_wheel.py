@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused FAP horizon + runnable-mask + scheduler score.
+
+The scheduler round's notification half: horizon[i] = min over in-edges of
+(t[pre] + delay), clamped at t_end and at the per-round cap, then the
+runnable test and score formation (clock if runnable else +inf) — one VMEM
+pass instead of four HLO loops over [N].
+
+Layout mirrors the hines kernel's TPU transpose: neurons lie along the
+128-wide lane dimension, the K in-edges along sublanes, so the min-reduce
+is a full-width VPU column reduction over a [K, BN] tile.  The edge gather
+(t_clock[pre] -> cand) happens outside the kernel as a single XLA gather —
+the by-post edge layout makes the in-kernel work purely dense.
+
+VMEM/block = (K + 3) * BN * 8B; K = 16, BN = 256 -> ~39 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN_DEFAULT = 256
+
+
+def _horizon_kernel(cand_ref, t_clock_ref, hor_ref, score_ref, *,
+                    t_end, horizon_cap, eps):
+    cand = cand_ref[...]                       # [K, BN]
+    t_c = t_clock_ref[...]                     # [1, BN]
+    hor = jnp.minimum(jnp.min(cand, axis=0, keepdims=True), t_end)
+    hor = jnp.minimum(hor, t_c + horizon_cap)
+    runnable = t_c < hor - eps
+    hor_ref[...] = hor
+    score_ref[...] = jnp.where(runnable, t_c, jnp.inf)
+
+
+def horizon_score_pallas(cand, t_clock, *, t_end: float, horizon_cap: float,
+                         eps: float = 1e-12, block_n: int = BN_DEFAULT,
+                         interpret: bool = True):
+    """cand: [K, N] by-post candidates; t_clock: [N] -> (horizon[N], score[N]).
+
+    N must be a multiple of block_n (the ops wrapper pads).
+    """
+    K, N = cand.shape
+    assert N % block_n == 0, (N, block_n)
+    grid = (N // block_n,)
+    kernel = functools.partial(_horizon_kernel, t_end=t_end,
+                               horizon_cap=horizon_cap, eps=eps)
+    row = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    hor, score = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((K, block_n), lambda i: (0, i)), row],
+        out_specs=(row, row),
+        out_shape=(jax.ShapeDtypeStruct((1, N), cand.dtype),) * 2,
+        interpret=interpret,
+    )(cand, t_clock.reshape(1, N))
+    return hor[0], score[0]

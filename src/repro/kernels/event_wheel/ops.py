@@ -1,0 +1,92 @@
+"""Public jit'd wrappers: fused horizon + sort-free earliest-K selection.
+
+``fused_horizon_select`` replaces the scheduler round's scatter-min +
+clamp + runnable chain with one Pallas pass, and — when k_select > 0 —
+replaces ``jnp.sort(score)[k-1]`` with ``select_threshold``'s bisection on
+counts: the jaxpr of the whole selection path carries no sort primitive.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import use_interpret
+from repro.kernels.event_wheel.event_wheel import (BN_DEFAULT,
+                                                   horizon_score_pallas)
+
+
+def select_threshold(score, k: int, n_iters: int = 48):
+    """Smallest bisection point tau with count(score <= tau) >= k.
+
+    ``score <= tau`` then selects the K earliest runnable neurons (ties and
+    entries within the bisection resolution, (max-min)/2^n_iters, are all
+    included — with n_iters = 48 that is below f64 time resolution for any
+    millisecond-scale window, so the selection matches the sort-based kth
+    threshold).  Fewer than k finite scores -> tau = max (select all), the
+    same semantics as ``sort(score)[k-1] = +inf``.  Reductions only.
+    """
+    finite = jnp.isfinite(score)
+    any_run = finite.any()
+    lo = jnp.min(jnp.where(finite, score, jnp.inf))
+    hi = jnp.max(jnp.where(finite, score, -jnp.inf))
+
+    def body(_, c):
+        lo, hi = c
+        mid = 0.5 * (lo + hi)
+        enough = jnp.sum(score <= mid) >= k
+        return jnp.where(enough, lo, mid), jnp.where(enough, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
+    return jnp.where(any_run, hi, jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("t_end", "horizon_cap", "k_select",
+                                  "n_iters", "block_n"))
+def fused_horizon_select(t_clock, pre_byk, delay_byk, *, t_end: float,
+                         horizon_cap: float, k_select: int = 0,
+                         n_iters: int = 48, block_n: int = BN_DEFAULT):
+    """Fused scheduler-round notification half.
+
+    t_clock: f64[N]; pre_byk: i32[K, N], delay_byk: f64[K, N] (the static
+    by-post edge layout: column i holds neuron i's K in-edges).
+    Returns (horizon[N], runnable bool[N]); with k_select > 0 the mask is
+    restricted to the K earliest runnable neurons by threshold count.
+    """
+    K, N = pre_byk.shape
+    cand = t_clock[pre_byk] + delay_byk        # one XLA gather
+    n_pad = (-N) % block_n
+    tc = t_clock
+    if n_pad:
+        cand = jnp.concatenate(
+            [cand, jnp.full((K, n_pad), jnp.inf, cand.dtype)], axis=1)
+        tc = jnp.concatenate(
+            [tc, jnp.full((n_pad,), t_end, tc.dtype)])   # pad never runnable
+    hor, score = horizon_score_pallas(cand, tc, t_end=t_end,
+                                      horizon_cap=horizon_cap,
+                                      block_n=block_n,
+                                      interpret=use_interpret())
+    hor, score = hor[:N], score[:N]
+    runnable = jnp.isfinite(score)
+    if k_select > 0:
+        tau = select_threshold(score, k_select, n_iters=n_iters)
+        runnable = jnp.logical_and(runnable, score <= tau)
+    return hor, runnable
+
+
+def by_post_layout(net):
+    """Host-side static prep: the [K, N] by-post (pre, delay) layout the
+    fused kernel consumes.  Requires the uniform grouped edge list that
+    ``make_network`` emits (``sched.grouped_k``)."""
+    import numpy as np
+
+    from repro.sched import grouped_k
+    k = grouped_k(net)
+    if k is None:
+        raise ValueError("fused horizon kernel needs a uniform by-post "
+                         "edge layout (make_network's grouping)")
+    n = int(net.n)
+    pre_byk = jnp.asarray(np.asarray(net.pre).reshape(n, k).T)
+    delay_byk = jnp.asarray(np.asarray(net.delay).reshape(n, k).T)
+    return pre_byk, delay_byk

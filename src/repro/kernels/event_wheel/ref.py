@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the fused horizon/selection kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def horizon_score_ref(cand, t_clock, *, t_end: float, horizon_cap: float,
+                      eps: float = 1e-12):
+    """cand: f64[K, N] = t_clock[pre] + delay in by-post layout.
+
+    Returns (horizon[N], score[N]): the per-neuron dependency horizon
+    (min over in-edges, clamped at t_end and t_clock + horizon_cap) and
+    the scheduler score (clock if runnable else +inf).
+    """
+    hor = jnp.minimum(cand.min(axis=0), t_end)
+    hor = jnp.minimum(hor, t_clock + horizon_cap)
+    runnable = t_clock < hor - eps
+    return hor, jnp.where(runnable, t_clock, jnp.inf)
+
+
+def select_earliest_ref(score, k: int):
+    """Sort-based earliest-K oracle (the dense scheduler path): select all
+    entries with score <= k-th smallest (ties included)."""
+    kth = jnp.sort(score)[min(k, score.shape[0]) - 1]
+    return jnp.logical_and(jnp.isfinite(score), score <= kth)

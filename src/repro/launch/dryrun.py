@@ -47,6 +47,15 @@ def sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() across jax versions: old jax returns a list
+    of per-computation dicts, new jax a single dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def input_specs(cfg: ArchConfig, shape: ShapeConfig):
     """Stand-ins for every model input of this (arch, shape) cell."""
     B, S = shape.global_batch, shape.seq_len
@@ -177,7 +186,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     try:
         lowered, compiled, compile_s = lower_and_compile(cfg, shape, mesh)
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = cost_dict(compiled)
         print(f"  {arch}/{shape_name}/{mesh_kind} memory_analysis:", mem, flush=True)
         print(f"  {arch}/{shape_name}/{mesh_kind} cost_analysis: "
               f"flops={cost.get('flops')} bytes={cost.get('bytes accessed')}",
@@ -216,7 +225,7 @@ def delta_pass(cfg: ArchConfig, shape: ShapeConfig, mesh) -> dict:
         for Lx in (La, Lb):
             cfg_x = dataclasses.replace(cfg, n_layers=Lx)
             _, comp_x, _ = lower_and_compile(cfg_x, shape, mesh)
-            cx = comp_x.cost_analysis() or {}
+            cx = cost_dict(comp_x)
             costs[Lx] = (cx.get("flops", 0.0), cx.get("bytes accessed", 0.0))
             del comp_x
     scale = (cfg.n_layers - La) / (Lb - La)
@@ -272,7 +281,7 @@ def run_paper_cell(mesh_kind: str, optimized: bool = False) -> dict:
             compiled = lowered.compile()
             compile_s = time.time() - t0
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = cost_dict(compiled)
         print(f"  {name}/{mesh_kind} memory_analysis:", mem, flush=True)
         txt = compiled.as_text()
         coll_total, _ = collective_bytes(txt)

@@ -12,12 +12,27 @@ from __future__ import annotations
 import math
 
 import jax
-from jax.sharding import AxisType
+
+try:                                   # jax >= 0.5: explicit Auto axis types
+    from jax.sharding import AxisType
+except ImportError:                    # older jax: meshes are Auto implicitly
+    AxisType = None
+
+
+def make_mesh_compat(shape, axes, devices=None):
+    """jax.make_mesh across jax versions: pass axis_types=(Auto, ...) when
+    the installed jax supports it, plain make_mesh otherwise."""
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes, devices=devices,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:              # make_mesh without axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def _mk(shape, axes, devices):
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

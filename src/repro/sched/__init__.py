@@ -1,0 +1,16 @@
+"""repro.sched — scheduler-side runtime structures for the FAP models.
+
+``wheel``  - bucketed event-wheel (calendar-queue) spike-parcel queue:
+             O(E) scatter insert, no global sort (the dense queue's
+             per-round argsort bottleneck).
+``api``    - the ``queue="dense"|"wheel"`` dispatch used by every
+             execution model, plus jaxpr introspection helpers.
+
+The matching Pallas kernel (fused horizon scatter-min + runnable mask +
+earliest-K threshold selection) lives in ``repro.kernels.event_wheel``.
+"""
+from repro.sched.api import (QueueOps, edge_insert, get_queue_ops,  # noqa: F401
+                             grouped_k, jaxpr_primitives)
+from repro.sched.wheel import (WheelQueue, WheelSpec, deliver_until,  # noqa: F401
+                               insert, insert_grouped, make_wheel,
+                               next_time, segment_rank)

@@ -1,0 +1,198 @@
+"""Bucketed event-wheel (calendar-queue) runtime for the FAP scheduler.
+
+``core/events.py`` realises spike-parcel delivery with a *global stable
+argsort over all E candidate events* per scheduler round (to hand every
+event a distinct free slot of its target neuron) plus a per-neuron argsort
+over the whole capacity axis.  Under GSPMD that argsort lowers to a
+distributed sort — the exact bottleneck ``distributed/fap_spmd.py`` flags.
+
+The wheel replaces both sorts with O(E) scatter arithmetic, the classic
+calendar-queue answer (Brette et al., q-bio/0611089):
+
+  * each neuron owns ``n_buckets`` time buckets of ``bucket_slots`` slots;
+    an event at time t hashes to bucket ``floor(t / bucket_width) mod B``;
+  * slot assignment *within* a bucket needs only the rank of an event among
+    the batch events that hit the same (neuron, bucket) — computed either
+    from the static edge grouping (``insert_grouped``, the production
+    fan-out path: zero extra work) or by ``segment_rank``'s iterative
+    scatter-min (``insert``, the drop-in generic path);
+  * the free slot for rank r is found by a cumsum over the S-slot bucket —
+    prefix sums and argmax, never a sort.
+
+Correctness never depends on the hash: a bucket is just a partition of the
+unordered slot set, so wrap-around collisions only affect *capacity*
+balance, not semantics.  ``deliver_until`` / ``next_time`` are masked
+reductions over the flat slot view, bit-identical to the dense queue, so
+the wheel is drop-in swappable (``queue="wheel"`` in every exec model) and
+spike trains match the dense queue event-for-event when neither overflows.
+
+Overflow stays *detected, never silent*: ``dropped`` accumulates exactly
+like the dense queue (within a bucket, later-index events drop first —
+the dense queue's stable-order semantics).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+class WheelSpec(NamedTuple):
+    """Static wheel geometry (python constants, closed over by jit)."""
+    n_buckets: int = 16
+    bucket_slots: int = 4
+    bucket_width: float = 0.5      # ms per bucket
+
+    @property
+    def capacity(self) -> int:
+        return self.n_buckets * self.bucket_slots
+
+
+class WheelQueue(NamedTuple):
+    """Same field layout as ``events.EventQueue`` — the slot axis is the
+    flattened (bucket, slot) view, so ``make_vardt_advance`` and the
+    delivery reductions operate on it unchanged."""
+    t: jnp.ndarray        # f64[N, B*S] delivery times (+inf = free)
+    w_ampa: jnp.ndarray   # f64[N, B*S]
+    w_gaba: jnp.ndarray   # f64[N, B*S]
+    dropped: jnp.ndarray  # i32[] overflow counter
+
+
+def make_wheel(n: int, spec: WheelSpec = WheelSpec(), dtype=jnp.float64) -> WheelQueue:
+    cap = spec.capacity
+    return WheelQueue(
+        t=jnp.full((n, cap), INF, dtype),
+        w_ampa=jnp.zeros((n, cap), dtype),
+        w_gaba=jnp.zeros((n, cap), dtype),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def _bucket_of(spec: WheelSpec, t_ev, valid):
+    t_safe = jnp.where(valid, t_ev, 0.0)
+    epoch = jnp.floor(t_safe / spec.bucket_width).astype(jnp.int32)
+    return jnp.mod(epoch, spec.n_buckets)
+
+
+def segment_rank(key, n_keys: int, max_rank: int):
+    """Rank of each event within its key group, in event-index order.
+
+    ``max_rank`` rounds of scatter-min over a key table: round r's winner
+    per key (the lowest-index unplaced event) gets rank r.  Events beyond
+    ``max_rank`` per key keep rank ``max_rank`` (they could never fit in a
+    bucket of that many slots anyway).  O(E + n_keys) per round, no sort.
+    """
+    E = key.shape[0]
+    idx = jnp.arange(E, dtype=jnp.int32)
+
+    def body(r, c):
+        rank, remaining = c
+        k = jnp.where(remaining, key, n_keys)
+        table = jnp.full((n_keys + 1,), E, jnp.int32).at[k].min(idx)
+        win = jnp.logical_and(remaining, table[k] == idx)
+        rank = jnp.where(win, r, rank)
+        return rank, jnp.logical_and(remaining, ~win)
+
+    rank0 = jnp.full((E,), max_rank, jnp.int32)
+    rank, _ = jax.lax.fori_loop(0, max_rank, body, (rank0, key < n_keys))
+    return rank
+
+
+def _place(spec: WheelSpec, free_rows, rank, valid):
+    """Map (bucket free-mask row [.., S], rank) -> (ok, slot-in-bucket).
+
+    The rank-th event takes the (rank+1)-th free slot, located by a prefix
+    sum over the S slots; ranks beyond the free count drop.
+    """
+    S = spec.bucket_slots
+    csum = jnp.cumsum(free_rows.astype(jnp.int32), axis=-1)
+    n_free = csum[..., -1]
+    ok = jnp.logical_and(valid, jnp.logical_and(rank < S, rank < n_free))
+    hit = jnp.logical_and(free_rows, csum == (rank + 1)[..., None])
+    slot = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+    return ok, slot
+
+
+def insert(spec: WheelSpec, eq: WheelQueue, target, t_ev, w_ampa, w_gaba,
+           valid, rank: Optional[jnp.ndarray] = None) -> WheelQueue:
+    """Drop-in generic insert (same signature as ``events.insert``): E
+    candidate events to arbitrary targets, O(E) scatters, no sort.
+
+    ``rank`` may carry precomputed ranks within (target, bucket) groups
+    (e.g. from a static edge layout); when None they are derived with
+    ``segment_rank``.
+    """
+    n, cap = eq.t.shape
+    B, S = spec.n_buckets, spec.bucket_slots
+    bucket = _bucket_of(spec, t_ev, valid)
+    tgt = jnp.where(valid, target, n)
+    key = jnp.where(valid, target * B + bucket, n * B)
+    if rank is None:
+        rank = segment_rank(key, n * B, S)
+    tgt_c = jnp.clip(tgt, 0, n - 1)
+    free = jnp.isinf(eq.t).reshape(n, B, S)
+    free_rows = free[tgt_c, bucket]                          # [E, S]
+    ok, slot = _place(spec, free_rows, rank, valid)
+    row = jnp.where(ok, tgt_c, n)                            # park drops OOB
+    col = bucket * S + slot
+    new_t = eq.t.at[row, col].set(t_ev, mode="drop")
+    new_a = eq.w_ampa.at[row, col].set(w_ampa, mode="drop")
+    new_g = eq.w_gaba.at[row, col].set(w_gaba, mode="drop")
+    dropped = eq.dropped + jnp.sum(jnp.logical_and(valid, ~ok)).astype(jnp.int32)
+    return WheelQueue(new_t, new_a, new_g, dropped)
+
+
+def insert_grouped(spec: WheelSpec, eq: WheelQueue, t_ev, w_ampa, w_gaba,
+                   valid) -> WheelQueue:
+    """Fast-path insert for by-post-grouped traffic: row i of the [N, k]
+    inputs holds neuron i's k in-edge candidates (the static fan-out
+    layout of ``make_network`` / the shard-local SPMD exchange).
+
+    Ranks within (neuron, bucket) come from pairwise equality against
+    earlier in-edges of the same row — k(k-1)/2 vector ops, no scatter and
+    no sort at all on the rank path.
+    """
+    n, k = t_ev.shape
+    B, S = spec.n_buckets, spec.bucket_slots
+    bucket = _bucket_of(spec, t_ev, valid)
+    cols = []
+    for i in range(k):
+        r = jnp.zeros((n,), jnp.int32)
+        for j in range(i):
+            same = jnp.logical_and(bucket[:, j] == bucket[:, i], valid[:, j])
+            r = r + same.astype(jnp.int32)
+        cols.append(r)
+    rank = jnp.stack(cols, axis=1)                           # [N, k]
+    free = jnp.isinf(eq.t).reshape(n, B, S)
+    free_rows = jnp.take_along_axis(free, bucket[:, :, None], axis=1)  # [N,k,S]
+    ok, slot = _place(spec, free_rows, rank, valid)
+    col = bucket * S + slot
+    col = jnp.where(ok, col, eq.t.shape[1])                  # OOB -> dropped
+    row = jnp.arange(n)[:, None]
+    new_t = eq.t.at[row, col].set(t_ev, mode="drop")
+    new_a = eq.w_ampa.at[row, col].set(w_ampa, mode="drop")
+    new_g = eq.w_gaba.at[row, col].set(w_gaba, mode="drop")
+    dropped = eq.dropped + jnp.sum(jnp.logical_and(valid, ~ok)).astype(jnp.int32)
+    return WheelQueue(new_t, new_a, new_g, dropped)
+
+
+def next_time(eq: WheelQueue):
+    """Earliest pending delivery time per neuron, +inf if none.  f64[N]."""
+    return eq.t.min(axis=1)
+
+
+def deliver_until(eq: WheelQueue, t_dl):
+    """Pop all events with t <= t_dl (per neuron); return summed weights.
+
+    Identical semantics (and identical code) to the dense queue — buckets
+    need no cursor maintenance because slots are located by free-mask.
+    """
+    due = eq.t <= t_dl[:, None]
+    wa = jnp.sum(jnp.where(due, eq.w_ampa, 0.0), axis=1)
+    wg = jnp.sum(jnp.where(due, eq.w_gaba, 0.0), axis=1)
+    cnt = due.sum(axis=1).astype(jnp.int32)
+    new_t = jnp.where(due, INF, eq.t)
+    return WheelQueue(new_t, eq.w_ampa, eq.w_gaba, eq.dropped), wa, wg, cnt

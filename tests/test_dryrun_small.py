@@ -17,14 +17,13 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs import ARCHS, get_config
 from repro.configs.base import ShapeConfig
 from repro.launch import dryrun
 from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_mesh_compat
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 out = {}
 for arch in ["smollm-135m", "qwen3-moe-30b-a3b", "rwkv6-7b", "zamba2-7b",
              "whisper-base", "internvl2-1b"]:
@@ -39,7 +38,7 @@ for arch in ["smollm-135m", "qwen3-moe-30b-a3b", "rwkv6-7b", "zamba2-7b",
         out[f"{arch}/{shape.kind}"] = {
             "temp": mem.temp_size_in_bytes,
             "coll": int(coll),
-            "flops": (compiled.cost_analysis() or {}).get("flops", 0.0),
+            "flops": dryrun.cost_dict(compiled).get("flops", 0.0),
         }
 print(json.dumps(out))
 """

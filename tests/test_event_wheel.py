@@ -1,0 +1,261 @@
+"""Event-wheel scheduler subsystem: insert/deliver equivalence against the
+dense argsort queue, overflow accounting, sort-free jaxpr certification,
+the fused horizon/selection kernel, and FAP end-to-end equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sched
+from repro.core import events as ev
+from repro.core import exec_common as xc
+from repro.core import exec_fap, morphology, network
+from repro.core.cell import CellModel
+from repro.kernels.event_wheel import ops as ew_ops
+from repro.kernels.event_wheel import ref as ew_ref
+from repro.kernels.event_wheel.event_wheel import horizon_score_pallas
+
+SPEC = sched.WheelSpec(n_buckets=8, bucket_slots=4, bucket_width=0.5)
+
+
+def _drain_equal(deq, weq, n):
+    """Both queues must deliver identical per-neuron sums/counts and agree
+    on next_time at every point."""
+    np.testing.assert_allclose(np.asarray(ev.next_time(deq)),
+                               np.asarray(sched.next_time(weq)))
+    d2, da, dg, dc = ev.deliver_until(deq, jnp.full((n,), 1e9))
+    w2, wa, wg, wc = sched.deliver_until(weq, jnp.full((n,), 1e9))
+    np.testing.assert_allclose(np.asarray(da), np.asarray(wa))
+    np.testing.assert_allclose(np.asarray(dg), np.asarray(wg))
+    assert (np.asarray(dc) == np.asarray(wc)).all()
+    assert np.isinf(np.asarray(w2.t)).all()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_wheel_matches_dense_random_traffic(seed):
+    """Randomized traffic with interleaved partial deliveries: the wheel is
+    event-for-event equivalent to the dense queue (dropped == 0 both)."""
+    rng = np.random.default_rng(seed)
+    n = 8
+    deq = ev.make_queue(n, SPEC.capacity)
+    weq = sched.make_wheel(n, SPEC)
+    for _ in range(4):
+        E = int(rng.integers(5, 25))
+        tgt = jnp.asarray(rng.integers(0, n, E), jnp.int32)
+        t = jnp.asarray(rng.uniform(0, 10, E))
+        wa = jnp.asarray(rng.exponential(1.0, E))
+        wg = jnp.asarray(rng.exponential(1.0, E))
+        valid = jnp.asarray(rng.random(E) < 0.8)
+        deq = ev.insert(deq, tgt, t, wa, wg, valid)
+        weq = sched.insert(SPEC, weq, tgt, t, wa, wg, valid)
+        assert int(deq.dropped) == int(weq.dropped) == 0
+        cut = jnp.asarray(rng.uniform(0, 10, n))
+        deq, da, dg, dc = ev.deliver_until(deq, cut)
+        weq, wa_, wg_, wc = sched.deliver_until(weq, cut)
+        np.testing.assert_allclose(np.asarray(da), np.asarray(wa_))
+        np.testing.assert_allclose(np.asarray(dg), np.asarray(wg_))
+        assert (np.asarray(dc) == np.asarray(wc)).all()
+        np.testing.assert_allclose(np.asarray(ev.next_time(deq)),
+                                   np.asarray(sched.next_time(weq)))
+    _drain_equal(deq, weq, n)
+
+
+def test_wheel_grouped_matches_generic():
+    """The grouped (static fan-out layout) fast path places the same event
+    set as the generic scatter-min path."""
+    rng = np.random.default_rng(5)
+    n, k = 12, 6
+    t = jnp.asarray(rng.uniform(0, 10, (n, k)))
+    wa = jnp.asarray(rng.exponential(1.0, (n, k)))
+    wg = jnp.asarray(rng.exponential(1.0, (n, k)))
+    valid = jnp.asarray(rng.random((n, k)) < 0.6)
+    wq_g = sched.insert_grouped(SPEC, sched.make_wheel(n, SPEC),
+                                t, wa, wg, valid)
+    tgt = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    wq = sched.insert(SPEC, sched.make_wheel(n, SPEC), tgt, t.reshape(-1),
+                      wa.reshape(-1), wg.reshape(-1), valid.reshape(-1))
+    assert int(wq_g.dropped) == int(wq.dropped) == 0
+    np.testing.assert_allclose(np.asarray(sched.next_time(wq_g)),
+                               np.asarray(sched.next_time(wq)))
+    _, a1, g1, c1 = sched.deliver_until(wq_g, jnp.full((n,), 1e9))
+    _, a2, g2, c2 = sched.deliver_until(wq, jnp.full((n,), 1e9))
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2))
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+
+
+def test_overflow_accounting_matches_dense():
+    """Overflow is detected, never silent, and matches the dense queue when
+    the capacity topologies coincide: E same-time events into one neuron hit
+    one bucket of S slots; a dense queue with capacity S drops the same
+    events (the later-index ones)."""
+    spec = sched.WheelSpec(n_buckets=4, bucket_slots=3, bucket_width=0.5)
+    n, E = 2, 7
+    tgt = jnp.zeros(E, jnp.int32)
+    t = jnp.full((E,), 1.2)                     # all in one bucket
+    w = jnp.arange(1.0, E + 1.0)                # distinguishable weights
+    valid = jnp.ones(E, bool)
+    deq = ev.insert(ev.make_queue(n, spec.bucket_slots), tgt, t, w,
+                    jnp.zeros(E), valid)
+    weq = sched.insert(spec, sched.make_wheel(n, spec), tgt, t, w,
+                       jnp.zeros(E), valid)
+    assert int(deq.dropped) == int(weq.dropped) == E - spec.bucket_slots
+    # the SAME events survive (stable index order within the group)
+    _, da, _, _ = ev.deliver_until(deq, jnp.full((n,), 10.0))
+    _, wa, _, _ = sched.deliver_until(weq, jnp.full((n,), 10.0))
+    np.testing.assert_allclose(np.asarray(da), np.asarray(wa))
+
+
+def test_wheel_insert_jaxpr_sort_free():
+    """Acceptance: the wheel insert path lowers with NO sort primitive —
+    the dense path's global argsort (a distributed sort under GSPMD) is
+    gone.  Sanity: the dense insert does contain one."""
+    rng = np.random.default_rng(0)
+    n, E = 16, 64
+    tgt = jnp.asarray(rng.integers(0, n, E), jnp.int32)
+    t = jnp.asarray(rng.uniform(0, 10, E))
+    w = jnp.asarray(rng.exponential(1.0, E))
+    valid = jnp.ones(E, bool)
+    weq = sched.make_wheel(n, SPEC)
+    prims = sched.jaxpr_primitives(
+        lambda q: sched.insert(SPEC, q, tgt, t, w, w, valid), weq)
+    assert "sort" not in prims, prims
+    k = E // n
+    prims_g = sched.jaxpr_primitives(
+        lambda q: sched.insert_grouped(SPEC, q, t.reshape(n, k),
+                                       w.reshape(n, k), w.reshape(n, k),
+                                       valid.reshape(n, k)), weq)
+    assert "sort" not in prims_g, prims_g
+    prims_d = sched.jaxpr_primitives(
+        lambda q: ev.insert(q, tgt, t, w, w, valid), ev.make_queue(n, 32))
+    assert "sort" in prims_d
+
+
+def test_threshold_select_jaxpr_sort_free():
+    score = jnp.asarray(np.random.default_rng(0).uniform(0, 5, 64))
+    prims = sched.jaxpr_primitives(
+        lambda s: ew_ops.select_threshold(s, 8), score)
+    assert "sort" not in prims, prims
+
+
+def test_segment_rank_matches_stable_order():
+    """Ranks follow event-index order within each key group; events beyond
+    max_rank keep the max_rank sentinel (they could never fit anyway)."""
+    max_rank = 8
+    rng = np.random.default_rng(2)
+    key = jnp.asarray(rng.integers(0, 5, 40), jnp.int32)
+    rank = np.asarray(sched.segment_rank(key, 5, max_rank))
+    seen = {}
+    for i, k in enumerate(np.asarray(key)):
+        expect = seen.get(int(k), 0)
+        assert rank[i] == min(expect, max_rank), (i, k, rank[i], expect)
+        seen[int(k)] = expect + 1
+
+
+def test_fused_horizon_matches_scatter_min():
+    """The Pallas kernel (interpret off-TPU) reproduces the jnp scatter-min
+    horizon and runnable mask exactly, including padding tails."""
+    rng = np.random.default_rng(4)
+    for n in (13, 256):
+        net = network.make_network(n, k_in=4, seed=int(n))
+        t_clock = jnp.asarray(rng.uniform(0.0, 3.0, n))
+        pre_byk, delay_byk = ew_ops.by_post_layout(net)
+        hor, run = ew_ops.fused_horizon_select(
+            t_clock, pre_byk, delay_byk, t_end=50.0, horizon_cap=2.0)
+        dnet = xc.to_device(net)
+        hor_ref = jnp.minimum(xc.horizon_times(dnet, n, t_clock, 50.0),
+                              t_clock + 2.0)
+        np.testing.assert_allclose(np.asarray(hor), np.asarray(hor_ref))
+        run_ref = np.asarray(t_clock) < np.asarray(hor_ref) - 1e-12
+        assert (np.asarray(run) == run_ref).all()
+
+
+def test_horizon_kernel_matches_ref_oracle():
+    rng = np.random.default_rng(6)
+    K, N = 5, 256
+    cand = jnp.asarray(rng.uniform(0.0, 10.0, (K, N)))
+    t_clock = jnp.asarray(rng.uniform(0.0, 8.0, N))
+    hor, score = horizon_score_pallas(cand, t_clock, t_end=6.0,
+                                      horizon_cap=2.0, interpret=True)
+    hor_r, score_r = ew_ref.horizon_score_ref(cand, t_clock, t_end=6.0,
+                                              horizon_cap=2.0)
+    np.testing.assert_allclose(np.asarray(hor), np.asarray(hor_r))
+    np.testing.assert_allclose(np.asarray(score), np.asarray(score_r))
+
+
+def test_threshold_select_matches_sort_oracle():
+    """Bisection threshold-count selection == the sort-based kth threshold
+    for well-separated scores, and >= min(k, runnable) always."""
+    rng = np.random.default_rng(7)
+    for trial in range(5):
+        score = np.where(rng.random(100) < 0.7, rng.uniform(0, 5, 100),
+                         np.inf)
+        s = jnp.asarray(score)
+        for k in (1, 5, 30, 99):
+            mask_ref = np.asarray(ew_ref.select_earliest_ref(s, k))
+            tau = ew_ops.select_threshold(s, k)
+            mask = np.asarray(jnp.isfinite(s) & (s <= tau))
+            assert (mask == mask_ref).all(), (trial, k)
+            n_run = np.isfinite(score).sum()
+            assert mask.sum() >= min(k, n_run)
+
+
+@pytest.fixture(scope="module")
+def small_run():
+    model = CellModel(morphology.soma_only())
+    net = network.make_network(12, k_in=4, seed=3)
+    rng = np.random.default_rng(1)
+    iinj = 0.16 + 0.004 * rng.standard_normal(12)
+    return model, net, iinj
+
+
+def _trains(res):
+    ts = np.asarray(res.rec.times)
+    c = np.asarray(res.rec.count)
+    return [np.sort(ts[i][: c[i]]) for i in range(len(c))]
+
+
+def test_fap_e2e_wheel_equals_dense(small_run):
+    """Acceptance: queue="wheel" produces spike trains IDENTICAL to the
+    dense queue (delivery is a set operation; only slot placement differs)."""
+    model, net, iinj = small_run
+    r_d = exec_fap.run_fap_vardt(model, net, iinj, 15.0)
+    r_w = exec_fap.run_fap_vardt(model, net, iinj, 15.0, queue="wheel")
+    assert int(r_d.dropped) == int(r_w.dropped) == 0
+    assert not bool(r_w.failed)
+    td, tw = _trains(r_d), _trains(r_w)
+    assert int(r_d.rec.count.sum()) > 0          # network actually active
+    for a, b in zip(td, tw):
+        assert len(a) == len(b)
+        if len(a):
+            np.testing.assert_allclose(a, b, atol=1e-9)
+    assert int(r_d.n_events) == int(r_w.n_events)
+
+
+def test_fap_e2e_fused_threshold_scheduler(small_run):
+    """Full sort-free round (wheel queue + fused Pallas horizon + threshold
+    earliest-K) against the dense/sort scheduler with the same K."""
+    model, net, iinj = small_run
+    r_s = exec_fap.run_fap_vardt(model, net, iinj, 15.0, k_select=4)
+    r_f = exec_fap.run_fap_vardt(model, net, iinj, 15.0, k_select=4,
+                                 queue="wheel", horizon_impl="fused",
+                                 select="threshold")
+    assert int(r_f.dropped) == 0 and not bool(r_f.failed)
+    ts, tf = _trains(r_s), _trains(r_f)
+    mismatched = sum(len(a) != len(b) for a, b in zip(ts, tf))
+    assert mismatched <= 1
+    for a, b in zip(ts, tf):
+        if len(a) == len(b) and len(a):
+            assert np.abs(a - b).max() < 0.25
+
+
+def test_bsp_wheel_equals_dense(small_run):
+    """The knob is wired through the BSP models too."""
+    from repro.core import exec_bsp
+    model, net, iinj = small_run
+    r_d = exec_bsp.run_bsp_fixed(model, net, iinj, 10.0)
+    r_w = exec_bsp.run_bsp_fixed(model, net, iinj, 10.0, queue="wheel")
+    assert int(r_w.dropped) == 0
+    td, tw = _trains(r_d), _trains(r_w)
+    for a, b in zip(td, tw):
+        np.testing.assert_allclose(a, b, atol=1e-9)

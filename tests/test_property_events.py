@@ -1,0 +1,76 @@
+"""Hypothesis property sweeps of the event queues (dense AND wheel).
+
+Skipped cleanly when the optional ``hypothesis`` dev dependency (see
+requirements-dev.txt) is not installed; the deterministic queue tests in
+test_events.py / test_event_wheel.py still run.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro import sched  # noqa: E402
+from repro.core import events as ev  # noqa: E402
+
+# bucket_slots >= max events per example, so no (neuron, bucket) collision
+# pattern can overflow the wheel — the properties assume capacity suffices
+WHEEL = sched.WheelSpec(n_buckets=16, bucket_slots=32, bucket_width=0.5)
+
+
+def _queues(n: int):
+    return (("dense", ev.make_queue(n, WHEEL.capacity), ev.insert,
+             ev.deliver_until),
+            ("wheel", sched.make_wheel(n, WHEEL),
+             lambda eq, *a: sched.insert(WHEEL, eq, *a),
+             sched.deliver_until))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7),
+                          st.floats(0.01, 100.0, allow_nan=False)),
+                min_size=1, max_size=32))
+def test_no_event_lost_property(evs):
+    """Every valid inserted event is delivered exactly once, with its exact
+    weight, provided capacity suffices — for both queue implementations."""
+    n = 8
+    tgt = jnp.array([e[0] for e in evs], jnp.int32)
+    t = jnp.array([e[1] for e in evs])
+    wa = jnp.ones(len(evs))
+    per_target = np.zeros(n)
+    for tg, _ in evs:
+        per_target[tg] += 1.0
+    for name, eq, insert, deliver in _queues(n):
+        eq = insert(eq, tgt, t, wa, jnp.zeros(len(evs)),
+                    jnp.ones(len(evs), bool))
+        assert int(eq.dropped) == 0, name
+        eq, da, _, cnt = deliver(eq, jnp.full((n,), 1e9))
+        np.testing.assert_allclose(np.asarray(da), per_target,
+                                   err_msg=name)
+        assert int(cnt.sum()) == len(evs), name
+        assert np.isinf(np.asarray(eq.t)).all(), name   # fully drained
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_partial_delivery_order_property(seed):
+    """Delivering up to t only pops events <= t; later events remain —
+    identically for the dense queue and the event wheel."""
+    rng = np.random.default_rng(seed)
+    n, E = 4, 20
+    tgt = jnp.asarray(rng.integers(0, n, E), jnp.int32)
+    t = jnp.asarray(rng.uniform(0, 10, E))
+    cut = float(rng.uniform(0, 10))
+    expect = np.zeros(n)
+    for tg, tt in zip(np.asarray(tgt), np.asarray(t)):
+        if tt <= cut:
+            expect[tg] += 1
+    for name, eq, insert, deliver in _queues(n):
+        eq = insert(eq, tgt, t, jnp.ones(E), jnp.zeros(E), jnp.ones(E, bool))
+        eq2, da, _, cnt = deliver(eq, jnp.full((n,), cut))
+        np.testing.assert_allclose(np.asarray(da), expect, err_msg=name)
+        remaining = np.asarray(eq2.t)
+        assert (remaining[np.isfinite(remaining)] > cut).all(), name

@@ -8,11 +8,15 @@
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
-from repro.core import exec_common as xc
-from repro.core import network
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import exec_common as xc  # noqa: E402
+from repro.core import network  # noqa: E402
 
 
 @settings(max_examples=30, deadline=None)
