@@ -9,8 +9,9 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (accuracy_fig5, delays_fig3, discontinuities_fig7,
-                            event_wheel, lab_experiment_fig8, regimes_fig9,
-                            roofline, speedup_fig10, stiffness_fig6)
+                            event_wheel, exchange, lab_experiment_fig8,
+                            regimes_fig9, roofline, speedup_fig10,
+                            stiffness_fig6)
     modules = [
         ("fig3", delays_fig3.run),
         ("fig5", accuracy_fig5.run),
@@ -20,6 +21,7 @@ def main() -> None:
         ("fig9", regimes_fig9.run),
         ("fig10", speedup_fig10.run),
         ("event_wheel", event_wheel.run),
+        ("exchange", exchange.run),
         ("roofline", lambda: roofline.run(mesh="all")),
     ]
     failures = 0

@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
-# One-shot local gate: the tier-1 test command (ROADMAP.md) plus a quick
-# smoke of the event-wheel microbenchmark (sort-free insert + equivalence
-# checks run inside it).  Usage: scripts/check.sh [extra pytest args]
+# One-shot local gate: the tier-1 test command (ROADMAP.md) plus quick
+# smokes of the event-wheel microbenchmark (sort-free insert + equivalence
+# checks run inside it) and the 4-device host-platform spike-parcel
+# transport benchmark (sparse-vs-allgather byte-scaling asserted inside —
+# SPMD transport regressions fail here, not just on a real mesh).
+# Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -11,5 +14,8 @@ python -m pytest -x -q "$@"
 
 echo "== event-wheel bench smoke (REPRO_BENCH_QUICK=1) =="
 REPRO_BENCH_QUICK=1 python -c "from benchmarks import event_wheel; event_wheel.run()"
+
+echo "== sparse-exchange bench smoke (4-device host platform) =="
+REPRO_BENCH_QUICK=1 python -c "from benchmarks import exchange; exchange.run()"
 
 echo "check.sh: all green"

@@ -55,16 +55,36 @@ def fanout(dnet: DeviceNet, spiked, t_spike):
     return dnet.post, t_ev, dnet.w_ampa, dnet.w_gaba, valid
 
 
-def horizon_times(dnet: DeviceNet, n: int, t_clock, t_end):
+def horizon_times(dnet: DeviceNet, n: int, t_clock, t_end, *,
+                  t_table=None, horizon_cap=None):
     """FAP dependency horizon: t_max[i] = min over in-edges (t[pre]+delay).
 
     This is the SPMD realisation of the paper's stepping-notification map
     (DESIGN.md §3): a scatter-min over the static edge list.
     Neurons without in-edges get t_end.
+
+    The same helper serves the shard-local SPMD round (the notify -> horizon
+    stage decomposition of ``distributed/fap_spmd``), which passes a
+    ``dnet`` holding the shard's local edge slice with the *shard-relative*
+    post index in ``dnet.post``:
+      t_table: optional clock table indexed by ``dnet.pre`` when pre ids are
+               global but ``t_clock`` is shard-local (the transport's notify
+               output); defaults to ``t_clock`` itself,
+      horizon_cap: optional per-round advancement bound (ms) folded in here
+               so every execution model clamps identically.
     """
-    cand = t_clock[dnet.pre] + dnet.delay
+    tt = t_clock if t_table is None else t_table
+    cand = tt[dnet.pre] + dnet.delay
     hor = jnp.full((n,), t_end, t_clock.dtype).at[dnet.post].min(cand)
-    return jnp.minimum(hor, t_end)
+    hor = jnp.minimum(hor, t_end)
+    if horizon_cap is not None:
+        hor = jnp.minimum(hor, t_clock + horizon_cap)
+    return hor
+
+
+def runnable_mask(t_clock, horizon, eps: float = 1e-12):
+    """A neuron is runnable when strictly behind its dependency horizon."""
+    return t_clock < horizon - eps
 
 
 def spike_rates(rec: ev.SpikeRecord, t_lo: float, t_hi: float):

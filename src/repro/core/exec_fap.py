@@ -156,9 +156,9 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                 horizon_cap=horizon_cap, n_iters=n_bisect,
                 k_select=k_select if select == "threshold" else 0)
         else:
-            horizon = xc.horizon_times(dnet, n, t_clock, t_end)
-            horizon = jnp.minimum(horizon, t_clock + horizon_cap)
-            runnable = t_clock < horizon - 1e-12
+            horizon = xc.horizon_times(dnet, n, t_clock, t_end,
+                                       horizon_cap=horizon_cap)
+            runnable = xc.runnable_mask(t_clock, horizon)
             if k_select > 0 and select == "threshold":
                 score = jnp.where(runnable, t_clock, jnp.inf)
                 tau = ew_ops.select_threshold(score, k_select,

@@ -1,4 +1,6 @@
 """Distribution layer: mesh-aware sharding rules (FSDP/TP/SP/EP), activation
-sharding constraints, and the SPMD FAP simulation round for the paper's own
-workload."""
+sharding constraints, the pluggable spike-parcel exchange transports, and
+the SPMD FAP simulation round for the paper's own workload."""
 from repro.distributed.ctx import sharding_ctx, constrain  # noqa: F401
+from repro.distributed.exchange import (ExchangeSpec, Transport,  # noqa: F401
+                                        get_transport)

@@ -1,0 +1,180 @@
+"""Pluggable spike-parcel transport for the SPMD FAP round.
+
+The paper's asynchronous execution model has exactly two point-to-point
+channels — stepping notifications (neuron clocks) and spike parcels — and
+the efficiency claim rests on their cost scaling with *activity*, not
+network size.  This module makes the channel realisation a first-class
+knob (``transport="allgather"|"sparse"`` on ``build_fap_round``):
+
+``allgather`` (reference)
+    Both channels are dense all-gathers of full N-length vectors, exactly
+    the collectives GSPMD would insert: bytes scale with N regardless of
+    firing rate.
+
+``sparse`` (the activity-scaled transport)
+    * spike parcels: each shard compacts its (spiked, t_spike) into a
+      destination-routed parcel buffer [n_shards, parcel_cap] of
+      (global id, time) entries via the sort-free cumsum-rank compaction
+      kernel (``kernels.event_wheel.ops.spike_compact``), then exchanges
+      rows with one tiled ``all_to_all``: per-device parcel bytes are
+      ``n_shards * parcel_cap * (4 + 8)`` — a function of the static
+      activity cap, independent of N.  Parcel-cap overflow is detected,
+      never silent: the per-round drop counter rides the round outputs
+      (``RunResult.dropped`` via ``run_fap_spmd``).
+    * clock notifications: an all-gather over each shard's *boundary set*
+      (local neurons with cross-shard out-edges — the static frontier
+      ``sharding.shard_frontier`` derives at build time from the by-post
+      edge layout), scattered back into an N-length clock table.  For
+      spatially local connectivity the frontier, and hence notify bytes,
+      shrinks far below N; for uniform random wiring it degenerates to
+      ~N (every neuron is boundary), which the channel attribution makes
+      visible instead of hiding.
+
+Every collective is wrapped in ``jax.named_scope`` with a channel tag
+(``exchange_notify`` / ``exchange_parcel``) that survives into compiled
+HLO metadata, so ``launch.hlo_analysis.collective_channel_bytes`` can
+*assert* the bytes-scale-with-activity claim per channel rather than
+assume it.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+NOTIFY_TAG = "exchange_notify"
+PARCEL_TAG = "exchange_parcel"
+TRANSPORTS = ("allgather", "sparse")
+
+
+class ExchangeSpec(NamedTuple):
+    """Static sparse-transport geometry (python constants, closed over by
+    jit — the ``WheelSpec`` of the communication layer)."""
+    parcel_cap: int = 64          # parcel slots per (source, dest) shard pair
+    compact_impl: str = "pallas"  # spike_compact dispatch: "pallas" | "jnp"
+
+
+class Transport(NamedTuple):
+    """One realisation of the two FAP notification channels.
+
+    ``notify``/``exchange`` run *inside* shard_map on shard-local arrays;
+    ``example_args``/``in_specs``/``shardings`` describe the transport's
+    extra static-routing arguments (empty for the dense reference).
+    """
+    name: str
+    notify: Callable       # (t_local, *targs) -> f64[N] global clock table
+    exchange: Callable     # (spiked_l, t_sp_l, *targs) ->
+    #                         (spiked bool[N], t_spike f64[N], local drops i32)
+    example_args: tuple    # transport arg arrays, appended to the round args
+    in_specs: tuple        # shard_map PartitionSpecs for those args
+    shardings: tuple       # jit NamedShardings for those args
+
+
+def _flat_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def _gather_axes(x, flat):
+    for ax in reversed(flat):
+        x = jax.lax.all_gather(x, ax, tiled=True)
+    return x
+
+
+def _shard_index(mesh, flat):
+    idx = jnp.zeros((), jnp.int32)
+    for ax in flat:
+        idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return idx
+
+
+def allgather_transport(mesh) -> Transport:
+    """The reference transport: both channels as dense N-length gathers."""
+    flat = _flat_axes(mesh)
+
+    def notify(t_local):
+        with jax.named_scope(NOTIFY_TAG):
+            return _gather_axes(t_local, flat)
+
+    def exchange(spiked, t_sp):
+        with jax.named_scope(PARCEL_TAG):
+            spiked_all = _gather_axes(spiked, flat)
+            tsp_all = _gather_axes(t_sp, flat)
+        return spiked_all, tsp_all, jnp.zeros((), jnp.int32)
+
+    return Transport("allgather", notify, exchange, (), (), ())
+
+
+def sparse_transport(mesh, n: int, net, spec: ExchangeSpec) -> Transport:
+    """Activity-scaled transport: frontier-gather notify + capped
+    destination-routed parcel ``all_to_all``.  Routing tables are derived
+    host-side from the concrete edge list (``net``) at build time."""
+    from repro.distributed.sharding import shard_frontier
+    from repro.kernels.event_wheel import ops as ew_ops
+
+    flat = _flat_axes(mesh)
+    n_shards = int(np.prod([mesh.shape[a] for a in flat]))
+    n_local = n // n_shards
+    cap = int(spec.parcel_cap)
+    fr = shard_frontier(np.asarray(net.pre), np.asarray(net.post), n, n_shards)
+    b_rel = jnp.asarray(fr.boundary_rel)            # i32[n_shards, F] sharded
+    b_gid = jnp.asarray(fr.boundary_gid)            # i32[n_shards, F] replicated
+    dest_map = jnp.asarray(fr.dest_map)             # bool[N, n_shards] sharded
+
+    def notify(t_local, b_rel_l, b_gid_all, dest_l):
+        del dest_l
+        with jax.named_scope(NOTIFY_TAG):
+            mine = t_local[jnp.clip(b_rel_l[0], 0, n_local - 1)]      # [F]
+            allv = _gather_axes(mine, flat)                # [n_shards * F]
+            table = jnp.full((n,), jnp.inf, t_local.dtype)
+            # pad slots carry the gid sentinel n -> parked out of range
+            table = table.at[b_gid_all.reshape(-1)].set(allv, mode="drop")
+            offset = _shard_index(mesh, flat) * n_local
+            table = jax.lax.dynamic_update_slice(table, t_local, (offset,))
+        return table
+
+    def exchange(spiked, t_sp, b_rel_l, b_gid_all, dest_l):
+        del b_rel_l, b_gid_all
+        with jax.named_scope(PARCEL_TAG):
+            # row d of the parcel buffer = this shard's spikes with at least
+            # one synapse into shard d (deduped by the static dest map)
+            mask = jnp.logical_and(dest_l, spiked[:, None]).T  # [S, n_local]
+            vals = jnp.broadcast_to(t_sp[None, :], mask.shape)
+            idx, ts, cnt = ew_ops.spike_compact(mask, vals, cap,
+                                                impl=spec.compact_impl)
+            offset = _shard_index(mesh, flat) * n_local
+            gid = jnp.where(idx < n_local, idx + offset, n)  # sentinel -> n
+            gid_r = jax.lax.all_to_all(gid, flat, 0, 0, tiled=True)
+            ts_r = jax.lax.all_to_all(ts, flat, 0, 0, tiled=True)
+            spiked_all = jnp.zeros((n,), bool).at[gid_r.reshape(-1)].set(
+                True, mode="drop")
+            tsp_all = jnp.zeros((n,), t_sp.dtype).at[gid_r.reshape(-1)].set(
+                ts_r.reshape(-1), mode="drop")
+            drops = jnp.sum(jnp.maximum(cnt - cap, 0)).astype(jnp.int32)
+        return spiked_all, tsp_all, drops
+
+    rowspec = P(flat, None)
+    return Transport(
+        "sparse", notify, exchange,
+        example_args=(b_rel, b_gid, dest_map),
+        in_specs=(rowspec, P(None, None), rowspec),
+        shardings=(NamedSharding(mesh, rowspec),
+                   NamedSharding(mesh, P(None, None)),
+                   NamedSharding(mesh, rowspec)),
+    )
+
+
+def get_transport(name: str, mesh, *, n: int, net=None,
+                  spec: ExchangeSpec = ExchangeSpec()) -> Transport:
+    """Transport dispatch — the ``transport="allgather"|"sparse"`` knob."""
+    if name == "allgather":
+        return allgather_transport(mesh)
+    if name == "sparse":
+        if net is None:
+            raise ValueError("transport='sparse' derives its routing tables "
+                             "from the concrete edge list: pass net=")
+        return sparse_transport(mesh, n, net, spec)
+    raise ValueError(f"unknown transport {name!r} (want one of {TRANSPORTS})")

@@ -5,13 +5,39 @@ This is the paper's execution model mapped onto the production mesh
 out-edge lists) are sharded across every mesh axis; one jitted ``fap_round``
 advances all runnable neurons to their dependency horizons.
 
-Collectives per round (inserted by GSPMD from the shardings):
-  * clock exchange — gather of t[pre] along cross-shard in-edges
-    (the paper's stepping notifications, amortised exactly the same way:
-    one exchange per round, not per neuron pair),
-  * event exchange — the argsort-based queue insert over the edge list
-    (spike parcels; the §Perf hillclimb replaces the global sort with a
-    per-shard bucketed exchange).
+The round decomposes into five composable stages, shared with the
+single-host execution models through ``exec_common`` and ``repro.sched``:
+
+  notify   — exchange neuron clocks (the paper's stepping notifications):
+             ``distributed.exchange.Transport.notify``
+  horizon  — per-neuron dependency horizon + runnable mask:
+             ``exec_common.horizon_times`` / ``runnable_mask`` (the same
+             helper the single-host exec models call, here with the
+             shard-relative post index and the notify clock table)
+  advance  — per-neuron variable-order variable-step BDF to the horizon:
+             ``exec_bsp.make_vardt_advance`` (unchanged, vmapped)
+  parcels  — exchange (spiked, t_spike): ``Transport.exchange``
+  insert   — shard-local grouped queue insert (``repro.sched``; with
+             queue="wheel" the bucketed O(E) scatter, no sort anywhere)
+
+Communication is owned entirely by the transport (the
+``transport="allgather"|"sparse"`` knob, mirroring the ``queue`` knob):
+
+  * ``allgather`` — the reference realisation: both channels as dense
+    all-gathers of full N-length vectors (bytes scale with N),
+  * ``sparse``   — capped destination-routed parcel ``all_to_all`` plus a
+    boundary-set notify gather (parcel bytes scale with the static
+    activity cap, not N).  Requires ``optimized=True`` and the concrete
+    ``net`` (routing tables are static, derived at build time).
+
+Each channel's collectives are tagged with ``jax.named_scope`` so
+``launch.hlo_analysis.collective_channel_bytes`` attributes per-channel
+bytes in the compiled HLO — the bytes-scale-with-activity claim is
+asserted by tests/benchmarks, not assumed.
+
+Parcel-cap and queue overflow stay detected-never-silent: every round
+returns a ``dropped`` counter (queue + transport), accumulated into
+``RunResult.dropped`` by ``run_fap_spmd``.
 
 ``build_fap_round`` returns (fn, example_args, in_shardings) so the dry-run
 can lower it on the 16x16 and 2x16x16 meshes like any LM cell.
@@ -28,8 +54,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro import sched
 from repro.core import bdf
+from repro.core import exec_common as xc
 from repro.core.cell import CellModel
 from repro.core.exec_bsp import make_vardt_advance
+from repro.distributed.exchange import ExchangeSpec, get_transport
 
 
 class PaperNeuroSpec(NamedTuple):
@@ -44,26 +72,35 @@ class PaperNeuroSpec(NamedTuple):
 def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
                     opts: bdf.BDFOptions = bdf.BDFOptions(),
                     optimized: bool = False, queue: str = "dense",
-                    wheel: sched.WheelSpec = sched.WheelSpec()):
+                    wheel: sched.WheelSpec = sched.WheelSpec(),
+                    transport: str = "allgather",
+                    exchange: ExchangeSpec = ExchangeSpec(), net=None):
     """optimized=False: paper-faithful baseline — horizon scatter-min and
     event insert as *global* ops, lowered by GSPMD (collective-heavy: with
     queue="dense" the global argsort in the insert becomes a distributed
     sort; queue="wheel" already removes the sort from the global path).
 
     optimized=True (§Perf): the communication is exactly the paper's two
-    notification channels and nothing else —
-      (1) one all-gather of the neuron clock vector (stepping notifications),
-      (2) one all-gather of (spiked, t_spike) (spike parcels),
-    after which horizon computation and queue insertion run SHARD-LOCAL
-    inside shard_map (edges are sharded by postsynaptic neuron, aligned
-    with the neuron sharding, so no event ever crosses shards again).
-    With queue="wheel" the shard-local insert is the bucketed event-wheel
-    scatter (repro.sched) — no sort of any kind, local or distributed.
+    notification channels and nothing else, realised by the chosen
+    transport (see module docstring); horizon computation and queue
+    insertion run SHARD-LOCAL inside shard_map (edges are sharded by
+    postsynaptic neuron, aligned with the neuron sharding, so no event
+    ever crosses shards again).  With queue="wheel" the shard-local insert
+    is the bucketed event-wheel scatter (repro.sched) — no sort of any
+    kind, local or distributed.
+
+    The round returns (sts, eq_t, eq_a, eq_g, spiked, t_spike, n_deliv,
+    n_resets, dropped); ``dropped`` counts this round's queue overflow plus
+    sparse-transport parcel overflow (detected, never silent).
     """
     from functools import partial
 
     from jax.experimental.shard_map import shard_map
 
+    if transport != "allgather" and not optimized:
+        raise ValueError("sparse transport realises the shard-local "
+                         "(optimized=True) round; the global path has no "
+                         "explicit channels to replace")
     n, E = spec.n_neurons, spec.n_neurons * spec.k_in
     flat = tuple(mesh.axis_names)                  # shard over ALL axes
     nshard = P(flat)
@@ -73,6 +110,8 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
     n_local = n // n_shards
     qops = sched.get_queue_ops(queue, ev_cap=spec.ev_cap, wheel=wheel)
     qcap = qops.capacity
+    tp = get_transport(transport, mesh, n=n, net=net, spec=exchange) \
+        if optimized else None
 
     def _insert_byk(eq_t, eq_a, eq_g, t_ev, wa, wg, valid):
         """Grouped insert over the by-post edge layout (k_in per neuron);
@@ -85,41 +124,39 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
                                  wg.reshape(-1, k), valid.reshape(-1, k))
         return eq
 
-    def _gather_axes(x):
-        for ax in reversed(flat):
-            x = jax.lax.all_gather(x, ax, tiled=True)
-        return x
-
-    def _shard_offset():
-        idx = jnp.zeros((), jnp.int32)
-        for ax in flat:
-            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
-        return idx * n_local
-
-    def _round_local(sts, eq_t, eq_a, eq_g, pre_l, delay_l, wa_l, wg_l, iinj):
+    def _round_local(sts, eq_t, eq_a, eq_g, pre_l, delay_l, wa_l, wg_l, iinj,
+                     *targs):
         """One scheduler round on this shard's neurons.  All arrays are
-        shard-local; the ONLY communication is two explicit all-gathers —
-        the paper's clock-notification and spike-parcel channels."""
-        t_clock = sts.t
-        t_all = _gather_axes(t_clock)                  # (1) notifications
-        cand = t_all[pre_l] + delay_l
-        post_rel = jnp.repeat(jnp.arange(t_clock.shape[0]), spec.k_in)
-        horizon = jnp.full(t_clock.shape, spec.t_end, t_clock.dtype)
-        horizon = horizon.at[post_rel].min(cand)
-        horizon = jnp.minimum(horizon, t_clock + spec.horizon_cap)
-        runnable = t_clock < horizon - 1e-12
+        shard-local; the ONLY communication is the transport's two channels
+        (plus the scalar telemetry psums)."""
+        t_local = sts.t
+        n_loc = t_local.shape[0]
+        # --- notify: clock exchange (stepping notifications) --------------
+        t_table = tp.notify(t_local, *targs)
+        # --- horizon + runnable (shared helper, shard-relative post) ------
+        post_rel = jnp.repeat(jnp.arange(n_loc), spec.k_in)
+        dloc = xc.DeviceNet(pre_l, post_rel, delay_l, wa_l, wg_l)
+        horizon = xc.horizon_times(dloc, n_loc, t_local, spec.t_end,
+                                   t_table=t_table,
+                                   horizon_cap=spec.horizon_cap)
+        runnable = xc.runnable_mask(t_local, horizon)
+        # --- advance ------------------------------------------------------
         sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
             sts, eq_t, eq_a, eq_g, horizon, runnable, iinj)
-        spiked_all = _gather_axes(spiked)              # (2) spike parcels
-        tsp_all = _gather_axes(t_sp)
+        # --- parcel exchange ----------------------------------------------
+        spiked_all, tsp_all, pdrop = tp.exchange(spiked, t_sp, *targs)
+        # --- insert (shard-local, grouped) --------------------------------
         valid = spiked_all[pre_l]
         t_ev = tsp_all[pre_l] + delay_l
         eq = _insert_byk(eq_t, eq_a, eq_g, t_ev, wa_l, wg_l, valid)
         nd = jax.lax.psum(nd.sum(), flat)
         nrs = jax.lax.psum(nrs.sum(), flat)
-        return sts, eq.t, eq.w_ampa, eq.w_gaba, spiked, nd, nrs
+        dropped = jax.lax.psum(eq.dropped + pdrop, flat)
+        return (sts, eq.t, eq.w_ampa, eq.w_gaba, spiked, t_sp, nd, nrs,
+                dropped)
 
-    def fap_round(sts, eq_t, eq_a, eq_g, pre, post, delay, w_a, w_g, iinj):
+    def fap_round(sts, eq_t, eq_a, eq_g, pre, post, delay, w_a, w_g, iinj,
+                  *targs):
         if optimized:
             # per-leaf specs: leading neuron dim sharded over every axis
             sts_specs = jax.tree_util.tree_map(
@@ -128,15 +165,17 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
             fn_l = shard_map(
                 _round_local, mesh=mesh,
                 in_specs=(sts_specs, n2, n2, n2, P(flat), P(flat), P(flat),
-                          P(flat), P(flat)),
-                out_specs=(sts_specs, n2, n2, n2, P(flat), P(), P()),
+                          P(flat), P(flat)) + tp.in_specs,
+                out_specs=(sts_specs, n2, n2, n2, P(flat), P(flat), P(), P(),
+                           P()),
                 check_rep=False)
-            return fn_l(sts, eq_t, eq_a, eq_g, pre, delay, w_a, w_g, iinj)
+            return fn_l(sts, eq_t, eq_a, eq_g, pre, delay, w_a, w_g, iinj,
+                        *targs)
         t_clock = sts.t
-        cand = t_clock[pre] + delay
-        horizon = jnp.full((n,), spec.t_end, t_clock.dtype).at[post].min(cand)
-        horizon = jnp.minimum(horizon, t_clock + spec.horizon_cap)
-        runnable = t_clock < horizon - 1e-12
+        dnet = xc.DeviceNet(pre, post, delay, w_a, w_g)
+        horizon = xc.horizon_times(dnet, n, t_clock, spec.t_end,
+                                   horizon_cap=spec.horizon_cap)
+        runnable = xc.runnable_mask(t_clock, horizon)
         sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
             sts, eq_t, eq_a, eq_g, horizon, runnable, iinj)
         valid = spiked[pre]
@@ -146,7 +185,8 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
         # not per their contract
         eq = qops.wrap(eq_t, eq_a, eq_g, jnp.zeros((), jnp.int32))
         eq = qops.insert(eq, post, t_ev, w_a, w_g, valid)
-        return sts, eq.t, eq.w_ampa, eq.w_gaba, spiked, nd.sum(), nrs.sum()
+        return (sts, eq.t, eq.w_ampa, eq.w_gaba, spiked, t_sp, nd.sum(),
+                nrs.sum(), eq.dropped)
 
     # ---- example args (ShapeDtypeStructs) and shardings -------------------
     f8 = jnp.float64
@@ -164,7 +204,7 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
         jax.ShapeDtypeStruct((E,), f8),                # w_ampa
         jax.ShapeDtypeStruct((E,), f8),                # w_gaba
         jax.ShapeDtypeStruct((n,), f8),                # iinj
-    )
+    ) + (tp.example_args if tp is not None else ())
 
     def st_spec(leaf):
         return NamedSharding(mesh, P(flat, *([None] * (leaf.ndim - 1))))
@@ -175,5 +215,65 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
     esh = NamedSharding(mesh, nshard)
     n2 = NamedSharding(mesh, P(flat, None))
     in_shardings = (sts_sh, n2, n2, n2, esh, esh, esh, esh, esh,
-                    NamedSharding(mesh, nshard))
+                    NamedSharding(mesh, nshard)) + \
+        (tp.shardings if tp is not None else ())
     return fap_round, args, in_shardings
+
+
+def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
+                 opts: bdf.BDFOptions = bdf.BDFOptions(),
+                 optimized: bool = True, queue: str = "dense",
+                 wheel: sched.WheelSpec = sched.WheelSpec(),
+                 transport: str = "allgather",
+                 exchange: ExchangeSpec = ExchangeSpec(),
+                 ev_cap: int = 32, horizon_cap: float = 2.0,
+                 max_rounds: int = 400, spk_cap: int = 128):
+    """Drive the SPMD round to t_end on a concrete network; the host loop
+    records spike trains and accumulates the per-round telemetry into the
+    standard ``RunResult`` (dropped = queue + parcel overflow — detected,
+    never silent).  Returns (RunResult, rounds)."""
+    from repro.core import events as ev
+    from repro.core.exec_bsp import RunResult
+
+    n = int(net.n)
+    k = sched.grouped_k(net)
+    if k is None:
+        raise ValueError("run_fap_spmd needs make_network's grouped by-post "
+                         "edge layout")
+    spec = PaperNeuroSpec(n_neurons=n, k_in=k, ev_cap=ev_cap, t_end=t_end,
+                          horizon_cap=horizon_cap)
+    fn, ex_args, in_sh = build_fap_round(model, spec, mesh, opts,
+                                         optimized=optimized, queue=queue,
+                                         wheel=wheel, transport=transport,
+                                         exchange=exchange, net=net)
+    qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
+    iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
+    Y = xc.batch_init(model, n)
+    sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj_v)
+    eq = qops.make(n)
+    eq_t, eq_a, eq_g = eq.t, eq.w_ampa, eq.w_gaba
+    dnet = xc.to_device(net)
+    # round-invariant args placed once with the build's shardings (the loop
+    # then pays the two transport channels only, no per-round resharding)
+    static = jax.device_put(
+        (dnet.pre, dnet.post, dnet.delay, dnet.w_ampa, dnet.w_gaba, iinj_v)
+        + ex_args[10:], in_sh[4:])
+    jfn = jax.jit(fn, in_shardings=in_sh)
+    rec = ev.make_spike_record(n, spk_cap)
+    n_ev = n_rs = n_drop = 0
+    rounds = 0
+    while rounds < max_rounds:
+        sts, eq_t, eq_a, eq_g, spiked, t_sp, nd, nrs, dropped = jfn(
+            sts, eq_t, eq_a, eq_g, *static)
+        rec = ev.record_spikes(rec, jnp.arange(n), t_sp, spiked)
+        n_ev += int(nd)
+        n_rs += int(nrs)
+        n_drop += int(dropped)
+        rounds += 1
+        if float(sts.t.min()) >= t_end - 1e-9 or bool(sts.failed.any()):
+            break
+    res = RunResult(rec, sts.nst.sum(), jnp.asarray(n_ev, jnp.int32),
+                    jnp.asarray(n_rs, jnp.int32),
+                    jnp.asarray(n_drop, jnp.int32), sts.failed.any(),
+                    sts.zn[:, 0])
+    return res, rounds

@@ -12,10 +12,15 @@ Scheme (DESIGN.md §6):
 Rules are name-based over the parameter tree; anything unmatched replicates
 (and is asserted to be small).  jax.jit tolerates non-divisible dims by
 padding, so e.g. vocab=151655 shards fine over 16.
+
+The neuro workload's static routing tables (``shard_frontier``) also live
+here: the sparse spike-parcel transport (``distributed.exchange``) consumes
+per-shard boundary sets and destination maps derived host-side from the
+by-post edge layout.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import numpy as np
@@ -172,3 +177,62 @@ def to_named(tree_of_specs, mesh):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), tree_of_specs,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# neuro workload: static shard-frontier routing tables (sparse transport)
+# ---------------------------------------------------------------------------
+class ShardFrontier(NamedTuple):
+    """Static routing tables for the sparse exchange, one row per shard.
+
+    boundary_rel: i32[n_shards, F] — shard-relative indices of each shard's
+        boundary neurons (local neurons with at least one cross-shard
+        out-edge); pad slots hold 0 and are neutralised by the gid sentinel.
+    boundary_gid: i32[n_shards, F] — the same neurons as global ids; pad
+        slots hold the sentinel ``n`` (parked out of range on scatter).
+    dest_map: bool[N, n_shards] — dest_map[i, d] iff neuron i has at least
+        one out-edge into shard d (self-shard included, so parcels
+        self-deliver through the same path).
+    """
+    boundary_rel: np.ndarray
+    boundary_gid: np.ndarray
+    dest_map: np.ndarray
+
+    @property
+    def frontier_size(self) -> int:
+        return int(self.boundary_rel.shape[1])
+
+
+def shard_frontier(pre: np.ndarray, post: np.ndarray, n: int,
+                   n_shards: int) -> ShardFrontier:
+    """Derive the per-shard cross-shard in-edge frontier from the edge list.
+
+    Neurons are block-sharded (shard of gid g = g // n_local, matching the
+    round's ``P(flat)`` row sharding); edges are read host-side once at
+    build time, so the returned tables are static for the whole run.
+    """
+    if n % n_shards:
+        raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
+    n_local = n // n_shards
+    pre = np.asarray(pre, np.int64)
+    post = np.asarray(post, np.int64)
+    src_shard = pre // n_local
+    dst_shard = post // n_local
+
+    # destination map: unique (pre, dst_shard) pairs
+    dest_map = np.zeros((n, n_shards), bool)
+    dest_map[pre, dst_shard] = True
+
+    # boundary set of shard s: its neurons appearing as pre on cross edges
+    cross = src_shard != dst_shard
+    bnd = np.unique(np.stack([src_shard[cross], pre[cross]], axis=1), axis=0)
+    sizes = np.bincount(bnd[:, 0], minlength=n_shards) if bnd.size else \
+        np.zeros(n_shards, np.int64)
+    F = max(1, int(sizes.max()) if sizes.size else 1)
+    boundary_gid = np.full((n_shards, F), n, np.int32)
+    boundary_rel = np.zeros((n_shards, F), np.int32)
+    for s in range(n_shards):
+        gids = bnd[bnd[:, 0] == s, 1]
+        boundary_gid[s, : len(gids)] = gids
+        boundary_rel[s, : len(gids)] = gids - s * n_local
+    return ShardFrontier(boundary_rel, boundary_gid, dest_map)

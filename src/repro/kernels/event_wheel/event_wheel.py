@@ -57,3 +57,53 @@ def horizon_score_pallas(cand, t_clock, *, t_end: float, horizon_cap: float,
         interpret=interpret,
     )(cand, t_clock.reshape(1, N))
     return hor[0], score[0]
+
+
+def _compact_kernel(mask_ref, vals_ref, idx_ref, val_ref, cnt_ref, *, cap, m):
+    """One grid step compacts one mask row: cumsum rank -> one-hot place.
+
+    The rank of event j among its row's survivors is ``cumsum(mask)[j]-1``
+    (the event-wheel's free-slot search run in reverse: rank -> position
+    instead of position -> rank); placement is a [cap, M] one-hot reduction —
+    compares and sums only, so the whole compaction stays sort- and
+    scatter-free inside the kernel.
+    """
+    msk = mask_ref[...].astype(jnp.int32)          # [1, M]
+    vals = vals_ref[...]                           # [1, M]
+    csum = jnp.cumsum(msk, axis=-1)
+    pos = csum - msk                               # 0-based rank where mask=1
+    total = csum[0, -1]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (cap, m), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (cap, m), 1)
+    hit = jnp.logical_and(pos == slot, msk == 1)   # [cap, M]
+    filled = slot[:, 0] < jnp.minimum(total, cap)
+    idx = jnp.sum(jnp.where(hit, col, 0), axis=1)
+    val = jnp.sum(jnp.where(hit, vals, 0.0), axis=1)
+    idx_ref[...] = jnp.where(filled, idx, m)[None, :].astype(jnp.int32)
+    val_ref[...] = jnp.where(filled, val, 0.0)[None, :]
+    cnt_ref[...] = total[None, None].astype(jnp.int32)
+
+
+def compact_rows_pallas(mask, values, *, cap: int, interpret: bool = True):
+    """Row-wise sort-free stream compaction (the spike-parcel packer).
+
+    mask: [D, M] (bool/int — nonzero = keep); values: [D, M] f64.
+    Returns (idx i32[D, cap] — column index of the r-th kept element, sentinel
+    M for empty slots; vals f64[D, cap]; count i32[D] — total kept per row,
+    which may exceed cap: the overflow is the caller's drop counter).
+    """
+    D, M = mask.shape
+    row_in = pl.BlockSpec((1, M), lambda d: (d, 0))
+    row_out = pl.BlockSpec((1, cap), lambda d: (d, 0))
+    kernel = functools.partial(_compact_kernel, cap=cap, m=M)
+    idx, vals, cnt = pl.pallas_call(
+        kernel,
+        grid=(D,),
+        in_specs=[row_in, row_in],
+        out_specs=(row_out, row_out, pl.BlockSpec((1, 1), lambda d: (d, 0))),
+        out_shape=(jax.ShapeDtypeStruct((D, cap), jnp.int32),
+                   jax.ShapeDtypeStruct((D, cap), values.dtype),
+                   jax.ShapeDtypeStruct((D, 1), jnp.int32)),
+        interpret=interpret,
+    )(mask.astype(jnp.int32), values)
+    return idx, vals, cnt[:, 0]

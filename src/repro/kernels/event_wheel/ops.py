@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import use_interpret
 from repro.kernels.event_wheel.event_wheel import (BN_DEFAULT,
+                                                   compact_rows_pallas,
                                                    horizon_score_pallas)
 
 
@@ -73,6 +74,26 @@ def fused_horizon_select(t_clock, pre_byk, delay_byk, *, t_end: float,
         tau = select_threshold(score, k_select, n_iters=n_iters)
         runnable = jnp.logical_and(runnable, score <= tau)
     return hor, runnable
+
+
+def spike_compact(mask, values, cap: int, *, impl: str = "pallas"):
+    """Sort-free row-wise compaction of sparse spike streams into capped
+    parcel buffers — the packer of the sparse spike-parcel transport
+    (``repro.distributed.exchange``).
+
+    mask: [D, M] (row d = the spikes destined for shard d); values: [D, M].
+    Returns (idx i32[D, cap] — source column of each packed entry, sentinel M
+    marks empty slots; vals f64[D, cap]; count i32[D] — kept per row, may
+    exceed cap so callers can account drops).  ``impl="pallas"`` runs the
+    cumsum-rank kernel (interpret off-TPU); ``"jnp"`` the scatter oracle.
+    """
+    if impl == "pallas":
+        return compact_rows_pallas(mask, values, cap=cap,
+                                   interpret=use_interpret())
+    if impl == "jnp":
+        from repro.kernels.event_wheel import ref
+        return ref.compact_rows_ref(mask, values, cap=cap)
+    raise ValueError(f"unknown spike_compact impl {impl!r}")
 
 
 def by_post_layout(net):

@@ -23,3 +23,22 @@ def select_earliest_ref(score, k: int):
     entries with score <= k-th smallest (ties included)."""
     kth = jnp.sort(score)[min(k, score.shape[0]) - 1]
     return jnp.logical_and(jnp.isfinite(score), score <= kth)
+
+
+def compact_rows_ref(mask, values, *, cap: int):
+    """Pure-jnp oracle for the spike-compaction kernel: cumsum ranks + a
+    masked scatter (still sort-free — the dense-queue argsort is the thing
+    being avoided, and the test census checks this path too)."""
+    D, M = mask.shape
+    msk = mask.astype(jnp.int32)
+    csum = jnp.cumsum(msk, axis=-1)
+    pos = csum - msk
+    total = csum[:, -1]
+    rows = jnp.broadcast_to(jnp.arange(D, dtype=jnp.int32)[:, None], (D, M))
+    col = jnp.where(jnp.logical_and(msk == 1, pos < cap), pos, cap)
+    idx = jnp.full((D, cap), M, jnp.int32).at[rows, col].set(
+        jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32)[None, :], (D, M)),
+        mode="drop")
+    vals = jnp.zeros((D, cap), values.dtype).at[rows, col].set(
+        jnp.broadcast_to(values, (D, M)), mode="drop")
+    return idx, vals, total

@@ -16,6 +16,13 @@ parse ``compiled.as_text()``:
 
 The same machinery reports trip-count-corrected FLOPs for dot ops (used to
 cross-check the L1/L2 compile-delta method in dryrun.py).
+
+``collective_channel_bytes`` additionally attributes each collective to a
+logical *channel*: the exchange layer (``distributed.exchange``) wraps its
+two notification channels in ``jax.named_scope`` tags that survive into the
+compiled HLO's ``metadata={op_name=...}``, so per-channel byte budgets
+(clock notifications vs spike parcels) are measured from the lowered
+module, not estimated.
 """
 from __future__ import annotations
 
@@ -80,16 +87,20 @@ _COLL_RE = re.compile(
     r"collective-permute)(?:-start|-done)?(?:\.\d+)?\(")
 
 
-def _collective_bytes_of(lines) -> int:
-    total = 0
+def _iter_collectives(lines):
+    """(result_bytes, line) for every collective instruction, skipping ROOT
+    tuples and the *-done half of start/done pairs (counted once)."""
     for ln in lines:
         m = _COLL_RE.search(ln)
-        if m and not ln.lstrip().startswith("ROOT tuple"):
-            # avoid double counting start/done pairs: count only *-start or plain
-            if "-done" in ln.split("(")[0]:
-                continue
-            total += _shape_bytes(m.group(1))
-    return total
+        if not m or ln.lstrip().startswith("ROOT tuple"):
+            continue
+        if "-done" in ln.split("(")[0]:
+            continue
+        yield _shape_bytes(m.group(1)), ln
+
+
+def _collective_bytes_of(lines) -> int:
+    return sum(b for b, _ in _iter_collectives(lines))
 
 
 def _while_info(lines) -> list:
@@ -160,6 +171,36 @@ def collective_bytes(hlo_text: str) -> Tuple[int, dict]:
     total = total_of(entry_name)
     detail = {k: v for k, v in local.items() if v}
     return total, detail
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+# the exchange layer's channel tags (see distributed/exchange.py)
+CHANNEL_TAGS = ("exchange_notify", "exchange_parcel")
+
+
+def collective_channel_bytes(hlo_text: str,
+                             tags: Tuple[str, ...] = CHANNEL_TAGS) -> dict:
+    """Per-channel collective bytes of a compiled module (flat, body-once).
+
+    A collective is attributed to the first ``tag`` appearing in its
+    ``op_name`` metadata (jax.named_scope propagates scope names there);
+    untagged collectives land in ``"other"``.  Result-shape bytes follow
+    the same convention as ``collective_bytes`` (tuple-shaped all-to-all
+    results sum their components, i.e. the full received buffer).
+    """
+    out = {t: 0 for t in tags}
+    out["other"] = 0
+    for b, ln in _iter_collectives(hlo_text.splitlines()):
+        op = _OPNAME_RE.search(ln)
+        name = op.group(1) if op else ""
+        for t in tags:
+            if t in name:
+                out[t] += b
+                break
+        else:
+            out["other"] += b
+    return out
 
 
 def collective_breakdown(hlo_text: str) -> dict:

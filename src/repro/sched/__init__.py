@@ -11,6 +11,7 @@ earliest-K threshold selection) lives in ``repro.kernels.event_wheel``.
 """
 from repro.sched.api import (QueueOps, edge_insert, get_queue_ops,  # noqa: F401
                              grouped_k, jaxpr_primitives)
-from repro.sched.wheel import (WheelQueue, WheelSpec, deliver_until,  # noqa: F401
-                               insert, insert_grouped, make_wheel,
-                               next_time, segment_rank)
+from repro.sched.wheel import (WheelQueue, WheelSpec,  # noqa: F401
+                               bucket_occupancy, deliver_until, insert,
+                               insert_grouped, make_wheel, next_time,
+                               segment_rank)

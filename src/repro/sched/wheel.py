@@ -50,6 +50,48 @@ class WheelSpec(NamedTuple):
     def capacity(self) -> int:
         return self.n_buckets * self.bucket_slots
 
+    @classmethod
+    def auto(cls, net, *, horizon_cap: float = 2.0, n_buckets: int = 16,
+             slack: float = 1.25) -> "WheelSpec":
+        """Size the wheel from the network itself (the ROADMAP follow-up).
+
+        * ``bucket_width`` from the delay distribution: an event enters the
+          wheel at most ``max_delay + horizon_cap`` ms ahead of its target's
+          clock, so one wheel revolution (``n_buckets * width``) spans that
+          horizon with ``slack`` headroom — in-flight events then occupy at
+          most one epoch per bucket and wrap-around collisions stay rare
+          (they would only cost capacity, never correctness).
+        * ``bucket_slots`` from the in-degree *and* the delay clustering:
+          the worst bucket load is a synchronized burst — every in-edge
+          fires at once and the lognormal delay mode piles deliveries into
+          one width-wide window.  For the grouped edge layout the exact
+          per-neuron sliding-window burst load is computed from the delays
+          themselves; otherwise an aligned per-(neuron, bucket) histogram
+          (x2 for window alignment) bounds it.  Floored at the default 4.
+        """
+        import numpy as np
+        d = np.asarray(net.delay)
+        post = np.asarray(net.post)
+        n, E = max(1, int(net.n)), int(d.shape[0])
+        span = float(d.max()) + horizon_cap
+        width = max(1e-3, slack * span / n_buckets)
+        k_in = max(1, E // n)
+        grouped = E == n * k_in and np.array_equal(
+            post, np.repeat(np.arange(n, dtype=post.dtype), k_in))
+        if grouped:
+            rows = np.sort(d.reshape(n, k_in), axis=1)
+            load = 1
+            for j in range(k_in):
+                within = (rows < rows[:, j: j + 1] + width).sum(axis=1) - j
+                load = max(load, int(within.max()))
+        else:
+            b = np.floor(d / width).astype(np.int64)
+            key = post.astype(np.int64) * (int(b.max()) + 1) + b
+            load = 2 * int(np.unique(key, return_counts=True)[1].max())
+        slots = max(4, int(np.ceil(slack * load)))
+        return cls(n_buckets=n_buckets, bucket_slots=slots,
+                   bucket_width=width)
+
 
 class WheelQueue(NamedTuple):
     """Same field layout as ``events.EventQueue`` — the slot axis is the
@@ -177,6 +219,25 @@ def insert_grouped(spec: WheelSpec, eq: WheelQueue, t_ev, w_ampa, w_gaba,
     new_g = eq.w_gaba.at[row, col].set(w_gaba, mode="drop")
     dropped = eq.dropped + jnp.sum(jnp.logical_and(valid, ~ok)).astype(jnp.int32)
     return WheelQueue(new_t, new_a, new_g, dropped)
+
+
+def bucket_occupancy(spec: WheelSpec, eq: WheelQueue):
+    """Occupancy telemetry for sizing: how full is the wheel right now?
+
+    Returns a dict of
+      per_bucket: i32[B] — occupied slots per bucket, summed over neurons,
+      max_bucket: i32[]  — fullest (neuron, bucket) cell (== S means some
+                  bucket is saturated: the next same-bucket event drops),
+      occupied:   i32[]  — total pending events.
+    """
+    n = eq.t.shape[0]
+    occ = (~jnp.isinf(eq.t)).reshape(n, spec.n_buckets, spec.bucket_slots)
+    per_cell = occ.sum(axis=2).astype(jnp.int32)            # [N, B]
+    return {
+        "per_bucket": per_cell.sum(axis=0),
+        "max_bucket": per_cell.max(),
+        "occupied": per_cell.sum(),
+    }
 
 
 def next_time(eq: WheelQueue):

@@ -249,6 +249,55 @@ def test_fap_e2e_fused_threshold_scheduler(small_run):
             assert np.abs(a - b).max() < 0.25
 
 
+def test_wheel_auto_sizing_no_overflow(small_run):
+    """WheelSpec.auto sizes width from the delay distribution and slots from
+    the in-degree: a full FAP run on make_network traffic must not overflow,
+    and the occupancy telemetry must stay within the auto-sized geometry."""
+    model, net, iinj = small_run
+    spec = sched.WheelSpec.auto(net)
+    # one revolution must span the event horizon (max delay + horizon cap)
+    assert spec.n_buckets * spec.bucket_width >= float(net.delay.max()) + 2.0
+    assert spec.capacity >= sched.grouped_k(net)
+    r = exec_fap.run_fap_vardt(model, net, iinj, 15.0, queue="wheel",
+                               wheel=spec)
+    assert int(r.dropped) == 0 and not bool(r.failed)
+    assert int(r.rec.count.sum()) > 0
+
+
+def test_wheel_auto_survives_synchronized_burst():
+    """Worst-case bucket load: every in-edge fires at t=0, so each neuron
+    receives all k_in events at its in-edge delays — the lognormal delay
+    mode piles them into one bucket-width window.  auto sizing computes the
+    exact per-neuron sliding-window burst load, so nothing may drop."""
+    n, k = 64, 16
+    net = network.make_network(n, k_in=k, seed=9)
+    spec = sched.WheelSpec.auto(net)
+    t_ev = jnp.asarray(net.delay.reshape(n, k))
+    eq = sched.insert_grouped(spec, sched.make_wheel(n, spec), t_ev,
+                              jnp.ones((n, k)), jnp.zeros((n, k)),
+                              jnp.ones((n, k), bool))
+    assert int(eq.dropped) == 0
+    occ = sched.bucket_occupancy(spec, eq)
+    assert int(occ["occupied"]) == n * k
+    assert int(occ["max_bucket"]) <= spec.bucket_slots
+
+
+def test_bucket_occupancy_telemetry():
+    """Occupancy counts exactly the pending events, per bucket."""
+    spec = sched.WheelSpec(n_buckets=4, bucket_slots=3, bucket_width=0.5)
+    eq = sched.make_wheel(3, spec)
+    occ = sched.bucket_occupancy(spec, eq)
+    assert int(occ["occupied"]) == 0 and int(occ["max_bucket"]) == 0
+    tgt = jnp.asarray([0, 0, 1], jnp.int32)
+    t = jnp.asarray([0.2, 0.3, 1.2])        # buckets 0, 0, 2
+    eq = sched.insert(spec, eq, tgt, t, jnp.ones(3), jnp.zeros(3),
+                      jnp.ones(3, bool))
+    occ = sched.bucket_occupancy(spec, eq)
+    assert int(occ["occupied"]) == 3
+    assert np.asarray(occ["per_bucket"]).tolist() == [2, 0, 1, 0]
+    assert int(occ["max_bucket"]) == 2
+
+
 def test_bsp_wheel_equals_dense(small_run):
     """The knob is wired through the BSP models too."""
     from repro.core import exec_bsp
