@@ -24,9 +24,50 @@ CACHE = os.path.join(os.path.dirname(__file__), "_calibration.json")
 REGIMES = {"quiet": 0.25, "slow": 1.5, "moderate": 6.5, "fast": 38.0,
            "burst": 55.8}
 
+# structured-record accumulator behind the CSV stream: each suite's run()
+# calls dump_json at its end; with REPRO_BENCH_JSON set the records land in
+# BENCH_<suite>.json (the nightly CI uploads these as artifacts, so the
+# perf trajectory is recorded instead of lost in job logs).
+_RECORDS: list = []
+_FLUSHED = 0
+
 
 def emit(name: str, us_per_call: float, derived: str):
+    _RECORDS.append({"name": name, "us_per_call": float(us_per_call),
+                     "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def record_csv(text: str):
+    """Fold a subprocess worker's CSV stdout into the record accumulator
+    (the worker's emit() prints land in a pipe, not this process)."""
+    for ln in text.splitlines():
+        parts = ln.split(",", 2)
+        if len(parts) != 3:
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        _RECORDS.append({"name": parts[0], "us_per_call": us,
+                         "derived": parts[2]})
+
+
+def dump_json(suite: str):
+    """Write records accumulated since the previous dump to
+    BENCH_<suite>.json (no-op unless REPRO_BENCH_JSON is set, or when no
+    new records arrived — a suite that already dumped internally must not
+    be clobbered by the orchestrator's per-suite dump)."""
+    global _FLUSHED
+    recs, _FLUSHED = _RECORDS[_FLUSHED:], len(_RECORDS)
+    if not recs or not os.environ.get("REPRO_BENCH_JSON"):
+        return
+    out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
+    payload = {"suite": suite,
+               "quick": os.environ.get("REPRO_BENCH_QUICK") == "1",
+               "records": recs}
+    with open(os.path.join(out_dir, f"BENCH_{suite}.json"), "w") as f:
+        json.dump(payload, f, indent=2)
 
 
 @functools.lru_cache(maxsize=None)

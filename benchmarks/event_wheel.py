@@ -13,7 +13,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import dump_json, emit, timeit
 
 K_IN = 16
 SPIKE_FRAC = 0.10            # fraction of presynaptic neurons spiking / round
@@ -97,6 +97,7 @@ def run() -> None:
     emit("event_wheel/equivalence", 0.0, f"delivered_match={ok}")
     if not ok:
         raise AssertionError("wheel/dense delivery mismatch")
+    dump_json("event_wheel")
 
 
 if __name__ == "__main__":

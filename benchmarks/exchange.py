@@ -12,6 +12,12 @@ n_shards * parcel_cap only) while the dense transport's grow with N; the
 worker asserts this, so a transport regression fails the bench (and
 ``scripts/check.sh``, which runs it in quick mode).
 
+A topology axis (``repro.core.topology``) covers the notify channel's
+structural lever: on block-structured wiring the boundary frontier, and
+hence notify bytes, must drop vs the uniform-random worst case by ~the
+measured frontier ratio (asserted; see also ``benchmarks/placement.py``
+for the placement-recovery grid on label-shuffled nets).
+
 Runs in a subprocess (jax device counts lock at first init):
   quick (REPRO_BENCH_QUICK=1): 2x2 mesh,   N in {256, 1024},   soma model
   full:                        16x16 mesh, N in {64k, 1M},     soma model
@@ -40,7 +46,9 @@ def parcel_cap_for(rate_hz: float, n_local: int, k_in: int,
 
 def run() -> None:
     """Orchestrator entry (run.py / check.sh): spawn the forced-host-device
-    worker and stream its CSV through."""
+    worker, stream its CSV through, record it for the JSON dump."""
+    from benchmarks.common import dump_json, record_csv
+
     quick = os.environ.get("REPRO_BENCH_QUICK") == "1"
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
@@ -54,8 +62,10 @@ def run() -> None:
         env=env, capture_output=True, text=True, cwd=root,
         timeout=(900 if quick else 7200))
     sys.stdout.write(res.stdout)
+    record_csv(res.stdout)
     if res.returncode != 0:
         raise RuntimeError(f"exchange worker failed:\n{res.stderr[-3000:]}")
+    dump_json("exchange")
 
 
 def _worker() -> None:
@@ -84,6 +94,7 @@ def _worker() -> None:
     n_shards = int(np.prod(shape))
     model = CellModel(morphology.soma_only())
     parcel = {}                    # (transport, regime, n) -> bytes
+    notify = {}                    # (transport, regime, n) -> bytes
 
     def concrete_args(net, spec, targs):
         n = int(net.n)
@@ -114,6 +125,7 @@ def _worker() -> None:
             compiled = jax.jit(fn, in_shardings=sh).lower(*args).compile()
             ch = collective_channel_bytes(compiled.as_text())
             parcel[(transport, regime, n)] = ch["exchange_parcel"]
+            notify[(transport, regime, n)] = ch["exchange_notify"]
             tag = f"exchange/bytes/{transport}/{regime}/n{n}"
             emit(tag, 0.0,
                  f"parcel={ch['exchange_parcel']};"
@@ -152,6 +164,42 @@ def _worker() -> None:
         raise AssertionError(f"allgather parcel bytes did not grow with N: {ag}")
     emit("exchange/scaling/allgather", 0.0,
          f"bytes_grow_with_N={ag[1] > 2 * ag[0]}")
+
+    # --- topology axis: block-structured wiring vs the uniform worst case --
+    # The notify channel gathers the shard_frontier boundary set, so its
+    # bytes must drop ~by the measured frontier ratio (the block locality
+    # factor) on block wiring, while the uniform nets above stay ~N.
+    from repro.core import topology
+    from repro.distributed import placement as plc
+
+    for n in sizes:
+        net_b = network.make_network(
+            n, k_in=k_in, seed=0,
+            topology=topology.TopologyConfig("block", n_blocks=n_shards,
+                                             p_in=0.99))
+        cap = parcel_cap_for(REGIME_RATES["low"], n // n_shards, k_in,
+                             n_shards)
+        spec = PaperNeuroSpec(n_neurons=n, k_in=k_in, ev_cap=16, t_end=100.0)
+        fn, args, sh = build_fap_round(
+            model, spec, mesh, optimized=True, transport="sparse",
+            exchange=ExchangeSpec(parcel_cap=cap), net=net_b)
+        ch = collective_channel_bytes(
+            jax.jit(fn, in_shardings=sh).lower(*args).compile().as_text())
+        net_u = network.make_network(n, k_in=k_in, seed=0)
+        f_u = plc.frontier_stats(net_u, n_shards)["F"]
+        f_b = plc.frontier_stats(net_b, n_shards)["F"]
+        base = notify[("sparse", "low", n)]
+        b_ratio = base / max(1, ch["exchange_notify"])
+        f_ratio = f_u / max(1, f_b)
+        emit(f"exchange/bytes/sparse_block/n{n}", 0.0,
+             f"notify={ch['exchange_notify']};parcel={ch['exchange_parcel']};"
+             f"notify_uniform={base};byte_ratio={b_ratio:.2f};"
+             f"frontier_ratio={f_ratio:.2f};F_uniform={f_u};F_block={f_b}")
+        if not b_ratio >= max(2.0, 0.8 * f_ratio):
+            raise AssertionError(
+                f"block topology did not cut notify bytes by the locality "
+                f"factor at n={n}: byte ratio {b_ratio:.2f} vs frontier "
+                f"ratio {f_ratio:.2f}")
 
 
 if __name__ == "__main__":

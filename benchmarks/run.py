@@ -10,7 +10,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (accuracy_fig5, delays_fig3, discontinuities_fig7,
                             event_wheel, exchange, lab_experiment_fig8,
-                            regimes_fig9, roofline, speedup_fig10,
+                            placement, regimes_fig9, roofline, speedup_fig10,
                             stiffness_fig6)
     modules = [
         ("fig3", delays_fig3.run),
@@ -22,8 +22,11 @@ def main() -> None:
         ("fig10", speedup_fig10.run),
         ("event_wheel", event_wheel.run),
         ("exchange", exchange.run),
+        ("placement", placement.run),
         ("roofline", lambda: roofline.run(mesh="all")),
     ]
+    from benchmarks.common import dump_json
+
     failures = 0
     for name, fn in modules:
         try:
@@ -32,6 +35,9 @@ def main() -> None:
             failures += 1
             print(f"{name}/ERROR,0,{traceback.format_exc(limit=1).strip()!r}",
                   file=sys.stderr)
+        # flush this suite's records to BENCH_<name>.json (no-op for suites
+        # that already dumped internally, or without REPRO_BENCH_JSON)
+        dump_json(name)
     if failures:
         sys.exit(1)
 

@@ -18,4 +18,10 @@ REPRO_BENCH_QUICK=1 python -c "from benchmarks import event_wheel; event_wheel.r
 echo "== sparse-exchange bench smoke (4-device host platform) =="
 REPRO_BENCH_QUICK=1 python -c "from benchmarks import exchange; exchange.run()"
 
+echo "== locality placement smoke (block topology, 4-device host mesh) =="
+# asserts placed-block notify bytes < uniform-random baseline by the
+# measured frontier ratio — locality regressions fail here, not only on a
+# real mesh
+REPRO_BENCH_QUICK=1 python -c "from benchmarks import placement; placement.run()"
+
 echo "check.sh: all green"

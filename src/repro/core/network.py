@@ -5,12 +5,21 @@ digital reconstruction: per-neuron in-degree with AMPA/GABA receptor mix,
 synaptic delays >= 0.1 ms with a long-tailed (lognormal) distribution whose
 mode sits well above the BSP communication interval (paper Fig. 3 — only
 ~0.13% of synapses sit at the 0.1 ms minimum).
+
+Wiring *structure* is the ``topology=`` knob (``repro.core.topology``):
+uniform-random (the seed behaviour, bit-identical for a given seed) or the
+structured generators (block/clustered, ring and 2-D-grid distance falloff,
+small-world) whose per-neuron block metadata (``Network.block``) makes
+locality measurable — the input to locality-aware shard placement
+(``repro.distributed.placement``).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import numpy as np
+
+from repro.core import topology as topo
 
 MIN_DELAY = 0.1      # ms — the BSP communication interval (paper §1)
 MAX_DELAY = 7.0      # ms — Fig. 3 cut-off (>7 ms is <1% of synapses)
@@ -24,6 +33,7 @@ class Network(NamedTuple):
     w_ampa: np.ndarray     # f64[E] uS (0 for GABA synapses)
     w_gaba: np.ndarray     # f64[E] uS (0 for AMPA synapses)
     min_delay: float
+    block: Optional[np.ndarray] = None   # i32[N] locality unit (topology)
 
     @property
     def n_edges(self) -> int:
@@ -38,15 +48,20 @@ def sample_delays(rng: np.random.Generator, size: int) -> np.ndarray:
 
 def make_network(n: int, k_in: int = 16, pct_gaba: float = 0.2,
                  w_exc: float = 1.0e-4, w_inh: float = 3.0e-4,
-                 seed: int = 0, allow_self: bool = False) -> Network:
-    """Random network: each neuron receives k_in synapses from uniform pres.
+                 seed: int = 0, allow_self: bool = False,
+                 topology="uniform") -> Network:
+    """Network with k_in synapses per neuron, wired per the topology knob.
 
+    topology: a ``repro.core.topology`` generator name ("uniform", "block",
+    "ring", "grid2d", "smallworld") or a ``TopologyConfig``; "uniform"
+    reproduces the historical networks bit-for-bit at a given seed.
     Weights are conductance increments per event (uS); defaults produce
     physiological EPSP sizes on the 20 um soma used in benchmarks.
     """
+    cfg = topo.as_config(topology)
     rng = np.random.default_rng(seed)
     post = np.repeat(np.arange(n, dtype=np.int32), k_in)
-    pre = rng.integers(0, n, size=n * k_in).astype(np.int32)
+    pre, block = topo.sample_pre(cfg, rng, n, k_in)
     if not allow_self:
         clash = pre == post
         pre[clash] = (pre[clash] + 1) % n
@@ -56,7 +71,8 @@ def make_network(n: int, k_in: int = 16, pct_gaba: float = 0.2,
     w_ampa = np.where(is_gaba, 0.0, w * w_exc)
     w_gaba = np.where(is_gaba, w * w_inh, 0.0)
     return Network(n=n, pre=pre, post=post, delay=delay,
-                   w_ampa=w_ampa, w_gaba=w_gaba, min_delay=float(delay.min()))
+                   w_ampa=w_ampa, w_gaba=w_gaba, min_delay=float(delay.min()),
+                   block=block)
 
 
 def regime_current(regime: str, i_thresh: float) -> float:

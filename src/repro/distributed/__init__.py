@@ -4,3 +4,6 @@ the SPMD FAP simulation round for the paper's own workload."""
 from repro.distributed.ctx import sharding_ctx, constrain  # noqa: F401
 from repro.distributed.exchange import (ExchangeSpec, Transport,  # noqa: F401
                                         get_transport)
+from repro.distributed.placement import (Placement,  # noqa: F401
+                                         compute_placement, place_network,
+                                         unpermute_result)

@@ -28,7 +28,13 @@ knob (``transport="allgather"|"sparse"`` on ``build_fap_round``):
       spatially local connectivity the frontier, and hence notify bytes,
       shrinks far below N; for uniform random wiring it degenerates to
       ~N (every neuron is boundary), which the channel attribution makes
-      visible instead of hiding.
+      visible instead of hiding.  Locality is *manufactured* one layer up:
+      structured topologies (``repro.core.topology``) plus a
+      locality-aware id permutation (``distributed.placement``, the
+      ``placement=`` knob on ``run_fap_spmd``) hand this transport an edge
+      list whose frontier — and notify gather — is already small; the
+      transport itself needs no placement awareness because the routing
+      tables are derived from whatever (relabeled) net it is given.
 
 Every collective is wrapped in ``jax.named_scope`` with a channel tag
 (``exchange_notify`` / ``exchange_parcel``) that survives into compiled

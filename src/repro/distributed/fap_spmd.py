@@ -227,14 +227,29 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
                  transport: str = "allgather",
                  exchange: ExchangeSpec = ExchangeSpec(),
                  ev_cap: int = 32, horizon_cap: float = 2.0,
-                 max_rounds: int = 400, spk_cap: int = 128):
+                 max_rounds: int = 400, spk_cap: int = 128,
+                 placement=None):
     """Drive the SPMD round to t_end on a concrete network; the host loop
     records spike trains and accumulates the per-round telemetry into the
     standard ``RunResult`` (dropped = queue + parcel overflow — detected,
-    never silent).  Returns (RunResult, rounds)."""
+    never silent).  Returns (RunResult, rounds).
+
+    placement: optional ``distributed.placement.Placement`` (or a method
+    name for ``compute_placement``) — the neuron-id relabeling is applied
+    before sharding and inverted on the returned spike record / final
+    state, so results stay in the caller's neuron order while the notify
+    frontier and parcel routing shrink with the realized locality.
+    """
     from repro.core import events as ev
     from repro.core.exec_bsp import RunResult
+    from repro.distributed import placement as plc
 
+    pl = None
+    if placement is not None:
+        n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        pl = placement if isinstance(placement, plc.Placement) else \
+            plc.compute_placement(net, n_shards, method=placement)
+        net, iinj = plc.place_inputs(net, iinj, pl)
     n = int(net.n)
     k = sched.grouped_k(net)
     if k is None:
@@ -276,4 +291,6 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
                     jnp.asarray(n_rs, jnp.int32),
                     jnp.asarray(n_drop, jnp.int32), sts.failed.any(),
                     sts.zn[:, 0])
+    if pl is not None:
+        res = plc.unpermute_result(res, pl)
     return res, rounds

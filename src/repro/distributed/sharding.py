@@ -202,20 +202,35 @@ class ShardFrontier(NamedTuple):
     def frontier_size(self) -> int:
         return int(self.boundary_rel.shape[1])
 
+    @property
+    def sizes(self) -> np.ndarray:
+        """True per-shard boundary counts (pad sentinels excluded)."""
+        n = int(self.dest_map.shape[0])
+        return (self.boundary_gid < n).sum(axis=1)
+
 
 def shard_frontier(pre: np.ndarray, post: np.ndarray, n: int,
-                   n_shards: int) -> ShardFrontier:
+                   n_shards: int, perm: np.ndarray = None) -> ShardFrontier:
     """Derive the per-shard cross-shard in-edge frontier from the edge list.
 
     Neurons are block-sharded (shard of gid g = g // n_local, matching the
     round's ``P(flat)`` row sharding); edges are read host-side once at
     build time, so the returned tables are static for the whole run.
+
+    ``perm`` (optional, from ``distributed.placement``): a neuron-id
+    relabeling applied to both endpoints before deriving the tables — the
+    frontier, and hence the sparse transport's notify bytes, then shrink
+    with whatever locality the placement realizes.  The returned tables
+    are in *new* (placed) ids, matching a run on the placed network.
     """
     if n % n_shards:
         raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
     n_local = n // n_shards
     pre = np.asarray(pre, np.int64)
     post = np.asarray(post, np.int64)
+    if perm is not None:
+        perm = np.asarray(perm, np.int64)
+        pre, post = perm[pre], perm[post]
     src_shard = pre // n_local
     dst_shard = post // n_local
 

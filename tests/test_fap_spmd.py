@@ -77,6 +77,46 @@ res_of, _ = run_fap_spmd(model, net, iinj_hot, 6.0, mesh, transport="sparse",
                          exchange=ExchangeSpec(parcel_cap=1), max_rounds=60)
 out["overflow_dropped"] = int(res_of.dropped)
 
+# locality-aware placement (ISSUE 3): a block-structured net run through the
+# sparse transport with the greedy placement permutation — spike trains must
+# come back in the caller's neuron order, identical to the single-host
+# exec_fap anchor on the unpermuted net
+from repro.core.topology import TopologyConfig
+from repro.distributed import placement as plc
+
+net_blk = network.make_network(n, k_in=4, seed=3,
+                               topology=TopologyConfig("block", n_blocks=4,
+                                                       p_in=0.95))
+res_blk_ref = exec_fap.run_fap_vardt(model, net_blk, iinj, 6.0,
+                                     step_budget=8, ev_cap=32)
+res_blk, _ = run_fap_spmd(model, net_blk, iinj, 6.0, mesh, transport="sparse",
+                          exchange=ExchangeSpec(parcel_cap=8),
+                          placement="greedy", max_rounds=60)
+out["placed_anchor"] = {"trains": trains(res_blk_ref),
+                        "dropped": int(res_blk_ref.dropped)}
+out["placed"] = {"trains": trains(res_blk), "dropped": int(res_blk.dropped),
+                 "failed": bool(res_blk.failed)}
+
+# per-channel bytes: block+placement vs uniform at the same N — the notify
+# frontier (and its gather) must shrink by ~the measured frontier ratio
+nn = 256
+net_u = network.make_network(nn, k_in=4, seed=5)
+net_b = network.make_network(nn, k_in=4, seed=5,
+                             topology=TopologyConfig("block", n_blocks=4,
+                                                     p_in=0.98))
+pl = plc.compute_placement(net_b, 4, method="greedy")
+spec = PaperNeuroSpec(n_neurons=nn, k_in=4, ev_cap=8, t_end=6.0)
+for tag, netx in (("uniform", net_u), ("block_placed",
+                                       plc.place_network(net_b, pl))):
+    fn, args, sh = build_fap_round(model, spec, mesh, optimized=True,
+                                   transport="sparse",
+                                   exchange=ExchangeSpec(parcel_cap=8),
+                                   net=netx)
+    txt = jax.jit(fn, in_shardings=sh).lower(*args).compile().as_text()
+    out[f"bytes/topo/{tag}"] = collective_channel_bytes(txt)
+out["frontier_ratio"] = (plc.frontier_stats(net_u, 4)["F"]
+                         / max(1, plc.frontier_stats(net_b, 4, pl)["F"]))
+
 # per-channel collective bytes of the compiled round at two values of N
 cap = 8
 for nn in (64, 256):
@@ -165,3 +205,29 @@ def test_notify_channel_attributed(spmd_out):
     """Both transports tag their clock-notification collectives."""
     for tr in ("sparse", "allgather"):
         assert spmd_out[f"bytes/{tr}/n256"]["exchange_notify"] > 0
+
+
+def test_placement_roundtrip_matches_single_host_anchor(spmd_out):
+    """Acceptance (ISSUE 3): the SPMD round on a greedy-placed block net
+    returns spike trains event-for-event identical to the single-host
+    exec_fap anchor on the unpermuted net — the placement permutation is
+    applied before sharding and inverted on outputs."""
+    assert spmd_out["placed"]["dropped"] == 0
+    assert not spmd_out["placed"]["failed"]
+    assert sum(len(t) for t in spmd_out["placed_anchor"]["trains"]) > 0
+    _assert_same_trains(spmd_out["placed_anchor"]["trains"],
+                        spmd_out["placed"]["trains"])
+
+
+def test_placement_cuts_notify_bytes_by_locality_factor(spmd_out):
+    """Acceptance (ISSUE 3): on the 4-shard mesh the block-structured net
+    under greedy placement cuts the notify-channel collective bytes vs
+    uniform-random by at least ~the measured frontier (locality) ratio;
+    parcel bytes stay cap-sized for both."""
+    uni = spmd_out["bytes/topo/uniform"]
+    blk = spmd_out["bytes/topo/block_placed"]
+    f_ratio = spmd_out["frontier_ratio"]
+    assert f_ratio >= 2.0
+    ratio = uni["exchange_notify"] / max(1, blk["exchange_notify"])
+    assert ratio >= max(2.0, 0.8 * f_ratio), (ratio, f_ratio)
+    assert blk["exchange_parcel"] == uni["exchange_parcel"]

@@ -1,0 +1,131 @@
+"""Structured connectivity generators (repro.core.topology): every topology
+preserves make_network's static invariants, the uniform path stays
+bit-identical to the pre-knob behaviour, and the structure each generator
+claims is *measured* from the emitted block metadata / edge list."""
+import numpy as np
+import pytest
+
+from repro import sched
+from repro.core import network
+from repro.core.topology import (TopologyConfig, TOPOLOGIES, as_config,
+                                 edge_block_pairs, intra_block_frac,
+                                 ring_distance)
+
+N, K = 64, 4
+
+
+def _net(name, **kw):
+    return network.make_network(N, k_in=K, seed=11,
+                                topology=TopologyConfig(name, **kw))
+
+
+def test_uniform_matches_pre_knob_stream():
+    """topology="uniform" consumes the identical rng stream as the seed
+    make_network, so historical seeded networks are bit-for-bit unchanged."""
+    rng = np.random.default_rng(7)
+    post = np.repeat(np.arange(N, dtype=np.int32), K)
+    pre = rng.integers(0, N, size=N * K).astype(np.int32)
+    clash = pre == post
+    pre[clash] = (pre[clash] + 1) % N
+    delay = network.sample_delays(rng, N * K)
+    net = network.make_network(N, k_in=K, seed=7)
+    assert np.array_equal(net.pre, pre)
+    assert np.allclose(net.delay, delay)
+    assert net.block is None
+    net2 = network.make_network(N, k_in=K, seed=7, topology="uniform")
+    assert np.array_equal(net2.pre, net.pre)
+
+
+@pytest.mark.parametrize("name", TOPOLOGIES)
+def test_static_invariants(name):
+    """Grouped by-post layout, uniform in-degree, no self edges, ids in
+    range — the invariants every downstream fast path relies on."""
+    net = _net(name)
+    assert sched.grouped_k(net) == K
+    assert net.pre.dtype == np.int32
+    assert (net.pre >= 0).all() and (net.pre < N).all()
+    assert (net.pre != net.post).all()
+    if name == "uniform":
+        assert net.block is None
+    else:
+        assert net.block is not None and net.block.shape == (N,)
+        assert net.block.dtype == np.int32
+
+
+def test_block_locality_measured():
+    """In-block edge fraction tracks p_in, and blocks are contiguous tiles."""
+    net = _net("block", n_blocks=4, p_in=0.9)
+    assert np.array_equal(net.block, np.arange(N) // (N // 4))
+    frac = intra_block_frac(net)
+    assert 0.8 <= frac <= 1.0
+    pairs = edge_block_pairs(net)
+    assert pairs.shape == (N * K, 2)
+    # cross edges really leave the block (out-of-block sampling never
+    # lands back inside)
+    lo = _net("block", n_blocks=4, p_in=0.0)
+    assert intra_block_frac(lo) < 0.05
+
+
+def test_ring_distance_falloff():
+    """Ring wiring concentrates |pre - post| near sigma; uniform does not."""
+    ring = _net("ring", sigma=3.0)
+    uni = network.make_network(N, k_in=K, seed=11)
+    d_ring = ring_distance(ring)
+    d_uni = ring_distance(uni)
+    assert (d_ring >= 1).all()
+    assert d_ring.mean() < 6.0 < d_uni.mean()
+
+
+def test_grid2d_offsets_local_and_square_only():
+    net = _net("grid2d", sigma=1.0)
+    side = 8
+    px, py = net.post % side, net.post // side
+    qx, qy = net.pre % side, net.pre // side
+    dx = np.minimum((px - qx) % side, (qx - px) % side)
+    dy = np.minimum((py - qy) % side, (qy - py) % side)
+    assert np.hypot(dx, dy).mean() < 2.5
+    with pytest.raises(ValueError):
+        network.make_network(48, k_in=K, seed=0, topology="grid2d")
+
+
+def test_smallworld_lattice_and_rewiring():
+    """p_rewire=0 is the pure k-nearest ring lattice; the measured rewired
+    fraction tracks p_rewire."""
+    lat = _net("smallworld", p_rewire=0.0)
+    offs = {1, 2, -1, -2}
+    d = (lat.pre.astype(np.int64) - lat.post.astype(np.int64)) % N
+    d = np.where(d > N // 2, d - N, d)
+    assert set(np.unique(d)) <= offs
+    sw = _net("smallworld", p_rewire=0.3)
+    d2 = (sw.pre.astype(np.int64) - sw.post.astype(np.int64)) % N
+    d2 = np.where(d2 > N // 2, d2 - N, d2)
+    frac_lattice = np.isin(d2, list(offs)).mean()
+    assert 0.55 <= frac_lattice <= 0.9          # ~1 - p_rewire (+ chance hits)
+
+
+def test_knob_validation():
+    with pytest.raises(ValueError):
+        network.make_network(N, k_in=K, topology="voronoi")
+    with pytest.raises(ValueError):
+        network.make_network(N, k_in=K,
+                             topology=TopologyConfig("block", n_blocks=7))
+    with pytest.raises(TypeError):
+        as_config(42)
+    with pytest.raises(ValueError):
+        intra_block_frac(network.make_network(N, k_in=K))
+
+
+def test_structured_nets_run_unmodified():
+    """A structured net drives the single-host FAP runner like any other
+    (grouped insert fast path included) — the knob changes wiring only."""
+    from repro.core import exec_fap, morphology
+    from repro.core.cell import CellModel
+
+    model = CellModel(morphology.soma_only())
+    net = _net("block", n_blocks=4, p_in=0.9)
+    rng = np.random.default_rng(1)
+    iinj = 0.16 + 0.004 * rng.standard_normal(N)
+    res = exec_fap.run_fap_vardt(model, net, iinj, 4.0)
+    assert not bool(res.failed)
+    assert int(res.dropped) == 0
+    assert int(np.asarray(res.rec.count).sum()) > 0
