@@ -1,0 +1,138 @@
+"""Active-set compaction benchmark (ISSUE 4): per-round wall time of the
+FAP vardt scheduler round, dense vs compact batch, across the low/high
+firing regimes of Fig. 9 at N = 1k..64k (quick: 1k..4k).
+
+The dense path vmaps the full step machinery over all N neurons every
+round, so its round time grows linearly in N whether 2% or 100% of the
+lanes do useful work; the compact path gathers a fixed [batch_cap] batch
+of the earliest runnable lanes and scatters results back, so at fixed cap
+its round time is ~flat in N (the residual O(N)/O(E) terms — horizon
+scatter-min, fan-out, queue insert — are cheap next to the BDF stepping).
+
+Asserted, not assumed:
+  * compact is event-for-event identical to dense on a full run, and a
+    forced batch_cap overflow rolls work to later rounds without drops
+    (deterministic — asserted in quick mode / per-PR CI too),
+  * per-round time at fixed batch_cap grows <= 1.5x from N=1k to N=16k
+    while dense grows >= 4x (CPU, low-activity regime).  The growth-ratio
+    bounds are timing-based and only enforced in the full (nightly) run;
+    quick mode asserts just the wide-margin compact-vs-dense speedup so a
+    contended CI runner cannot flake the per-PR gate.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import dump_json, emit, regime_iinj, soma_model, timeit
+
+K_IN = 16
+BATCH_CAP = 256
+T_END_IDENT = 40.0
+
+
+def _round_timer(model, net, iinj, warm_rounds: int = 4, span: int = 6,
+                 repeats: int = 3, **kw):
+    """Seconds per scheduler round, timed from a warmed-up state (queues
+    populated, clocks spread) rather than the all-zero init.
+
+    ``span`` consecutive rounds run inside ONE jitted fori_loop so the
+    carry updates stay in-place, exactly as inside the production
+    while_loop — timing round_body through a fresh jit boundary per round
+    would charge both paths an O(N) carry copy that the real runner never
+    pays."""
+    import jax
+
+    from repro.core import exec_fap
+
+    run = exec_fap.make_fap_vardt_runner(model, net, iinj, t_end=1e9,
+                                         max_rounds=1_000_000_000, **kw)
+    carry = jax.jit(run.init_carry)()
+    warm = jax.jit(lambda c: jax.lax.fori_loop(
+        0, warm_rounds, lambda i, cc: run.round_body(cc), c))
+    burst = jax.jit(lambda c: jax.lax.fori_loop(
+        0, span, lambda i, cc: run.round_body(cc), c))
+    carry = jax.block_until_ready(warm(carry))
+    _, secs = timeit(lambda: burst(carry), repeats=repeats)
+    return secs / span
+
+
+def run() -> None:
+    import jax
+
+    from repro.core import exec_common as xc
+    from repro.core import exec_fap, network
+
+    quick = os.environ.get("REPRO_BENCH_QUICK") == "1"
+    model = soma_model()
+    sizes = [1024, 4096] if quick else [1024, 4096, 16384, 65536]
+    lo_n, hi_n = sizes[0], (4096 if quick else 16384)
+    compact_max, dense_min = 1.5, 4.0     # growth bounds, full mode only
+
+    # ---- event-for-event identity, low and high regimes ------------------
+    n_id = 256
+    net_id = network.make_network(n_id, k_in=K_IN, seed=7)
+    for regime in ("quiet", "fast"):
+        iinj = regime_iinj(n_id, regime, seed=1)
+        r_d, rounds_d = exec_fap.make_fap_vardt_runner(
+            model, net_id, iinj, T_END_IDENT)()
+        r_c, rounds_c = exec_fap.make_fap_vardt_runner(
+            model, net_id, iinj, T_END_IDENT, batch="compact")()
+        same = (np.array_equal(np.asarray(r_d.rec.times),
+                               np.asarray(r_c.rec.times))
+                and np.array_equal(np.asarray(r_d.rec.count),
+                                   np.asarray(r_c.rec.count))
+                and int(rounds_d) == int(rounds_c)
+                and int(r_c.dropped) == 0 and not bool(r_c.failed))
+        m = xc.sched_metrics(r_c.sched)
+        emit(f"active_set/identity/{regime}", 0.0,
+             f"identical={same};n={n_id};rounds={int(rounds_c)};"
+             f"spikes={int(r_c.rec.count.sum())};"
+             f"occupancy={m['occupancy']:.3f}")
+        if not same:
+            raise AssertionError(
+                f"compact != dense spike trains ({regime} regime)")
+        # a forced overflow must roll, never drop
+        r_o, rounds_o = exec_fap.make_fap_vardt_runner(
+            model, net_id, iinj, T_END_IDENT, batch="compact",
+            batch_cap=32)()
+        assert int(r_o.dropped) == 0 and not bool(r_o.failed), regime
+        assert int(rounds_o) > int(rounds_c), regime
+        emit(f"active_set/overflow_rolls/{regime}", 0.0,
+             f"rounds={int(rounds_o)}_vs_{int(rounds_c)};dropped=0")
+
+    # ---- per-round wall time scaling -------------------------------------
+    times: dict = {}
+    for n in sizes:
+        net = network.make_network(n, k_in=K_IN, seed=7)
+        iinj = regime_iinj(n, "quiet", seed=1)
+        s_d = _round_timer(model, net, iinj)
+        s_c = _round_timer(model, net, iinj, batch="compact",
+                           batch_cap=BATCH_CAP)
+        times[n] = (s_d, s_c)
+        emit(f"active_set/dense_round/n{n}", s_d * 1e6, "regime=quiet")
+        emit(f"active_set/compact_round/n{n}", s_c * 1e6,
+             f"cap={BATCH_CAP};speedup_vs_dense={s_d / s_c:.2f}x")
+
+    g_dense = times[hi_n][0] / times[lo_n][0]
+    g_compact = times[hi_n][1] / times[lo_n][1]
+    speedup_hi = times[hi_n][0] / times[hi_n][1]
+    emit("active_set/scaling", 0.0,
+         f"span=n{lo_n}->n{hi_n};dense_growth={g_dense:.2f}x;"
+         f"compact_growth={g_compact:.2f}x;"
+         f"quiet_speedup_at_n{hi_n}={speedup_hi:.1f}x")
+    if quick:
+        # wide margin (measured ~20x+): robust to contended CI runners
+        assert speedup_hi >= 2.0, \
+            f"compact should beat dense at n{hi_n}: {speedup_hi:.2f}x"
+    else:
+        assert g_dense >= dense_min, \
+            f"dense round time should grow ~linearly in N: {g_dense:.2f}x"
+        assert g_compact <= compact_max, \
+            f"compact round time should be ~flat in N: {g_compact:.2f}x"
+    dump_json("active_set")
+
+
+if __name__ == "__main__":
+    run()

@@ -8,10 +8,10 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (accuracy_fig5, delays_fig3, discontinuities_fig7,
-                            event_wheel, exchange, lab_experiment_fig8,
-                            placement, regimes_fig9, roofline, speedup_fig10,
-                            stiffness_fig6)
+    from benchmarks import (accuracy_fig5, active_set, delays_fig3,
+                            discontinuities_fig7, event_wheel, exchange,
+                            lab_experiment_fig8, placement, regimes_fig9,
+                            roofline, speedup_fig10, stiffness_fig6)
     modules = [
         ("fig3", delays_fig3.run),
         ("fig5", accuracy_fig5.run),
@@ -23,6 +23,7 @@ def main() -> None:
         ("event_wheel", event_wheel.run),
         ("exchange", exchange.run),
         ("placement", placement.run),
+        ("active_set", active_set.run),
         ("roofline", lambda: roofline.run(mesh="all")),
     ]
     from benchmarks.common import dump_json

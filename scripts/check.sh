@@ -24,4 +24,10 @@ echo "== locality placement smoke (block topology, 4-device host mesh) =="
 # real mesh
 REPRO_BENCH_QUICK=1 python -c "from benchmarks import placement; placement.run()"
 
+echo "== active-set compaction smoke (compact == dense + flat round time) =="
+# asserts the compact batch path is event-for-event identical to dense and
+# that its per-round wall time stays ~flat in N at fixed batch_cap while
+# the dense path grows linearly — active-set regressions fail here
+REPRO_BENCH_QUICK=1 python -c "from benchmarks import active_set; active_set.run()"
+
 echo "check.sh: all green"

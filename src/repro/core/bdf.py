@@ -79,9 +79,16 @@ def _wrms(x, y, opts: BDFOptions):
     return jnp.sqrt(jnp.mean((x * w) ** 2))
 
 
-def reinit(model, t, y, iinj, opts: BDFOptions, counters=None) -> BDFState:
-    """(Re-)initialise the IVP at (t, y): order 1, heuristic h0."""
-    f = model.rhs(t, y, iinj)
+def reinit(model, t, y, iinj, opts: BDFOptions, counters=None,
+           f=None) -> BDFState:
+    """(Re-)initialise the IVP at (t, y): order 1, heuristic h0.
+
+    ``f`` may carry a precomputed rhs evaluation at (t, y) — the fused
+    deliver/step path (``step_or_deliver``) shares the rhs stream of the
+    Newton corrector with the reset heuristic instead of paying a second
+    evaluation."""
+    if f is None:
+        f = model.rhs(t, y, iinj)
     fn = _wrms(f, y, opts)
     h_heur = 0.5 / (fn + 1.0e-10)
     h = jnp.where(opts.h0 > 0, opts.h0, jnp.clip(h_heur, 1.0e-6, 1.0))
@@ -248,14 +255,37 @@ def _decrease_order(zn, tau, h, q):
 # --------------------------------------------------------------------------
 def step(model, st: BDFState, t_limit, iinj, opts: BDFOptions) -> BDFState:
     """Advance one accepted BDF step, never crossing t_limit (tstop mode)."""
+    st, _ = _step_impl(model, st, t_limit, iinj, opts)
+    return st
+
+
+def _step_impl(model, st: BDFState, t_limit, iinj, opts: BDFOptions,
+               deliver=None, y_ev=None):
+    """One accepted BDF step (cvStep).  Returns (state, f_first) where
+    ``f_first`` is the rhs evaluation of the first Newton iteration.
+
+    ``deliver`` (optional bool[]) rides event-delivery lanes through the
+    same Newton machinery: their first rhs is evaluated at the *current*
+    time on the post-event state ``y_ev`` instead of (t+h, ypred), and the
+    lane converges/accepts immediately — the caller rebuilds the order-1
+    reset from ``f_first`` while step lanes proceed unchanged.  With
+    ``deliver=None`` the lowered computation is identical to the
+    historical ``step``.
+    """
     dtype = st.zn.dtype
     y_ref = st.zn[0]
+    t0 = st.t
+    # restart term for the q->1 error-failure path (cvStep's small-NEF
+    # restart rebuilds zn[1] = h * f(t, zn[0])): zn[0] and t are only
+    # touched on accept, so the value is attempt-invariant — one
+    # evaluation hoisted out of the retry loop serves every attempt
+    f_restart = model.rhs(t0, y_ref, iinj)
 
     def wrms(x, y):
         return _wrms(x, y, opts)
 
     def attempt_body(carry):
-        st, ncf, nef, attempts, done = carry
+        st, ncf, nef, attempts, done, f_first = carry
 
         # ---- tstop / hmax clamp --------------------------------------------
         room = t_limit - st.t
@@ -275,8 +305,16 @@ def step(model, st: BDFState, t_limit, iinj, opts: BDFOptions) -> BDFState:
 
         # ---- modified Newton (cvNlsNewton) ---------------------------------
         def newton_body(c):
-            y, acor, delp, crate, m, conv, div, nni, nfe = c
-            f = model.rhs(t_new, y, iinj)
+            y, acor, delp, crate, m, conv, div, nni, nfe, f_keep = c
+            if deliver is None:
+                f = model.rhs(t_new, y, iinj)
+            else:
+                # deliver lanes share this evaluation: rhs at the current
+                # time on the post-event state (exactly reinit's f)
+                t_eval = jnp.where(deliver, t0, t_new)
+                y_eval = jnp.where(deliver, y_ev, y)
+                f = model.rhs(t_eval, y_eval, iinj)
+            f_keep = jnp.where(m == 0, f, f_keep)
             G = acor + zdot_term - gamma * f
             delta = model.solve_newton_mat(y, gamma, -G, mode=opts.precond)
             dnrm = wrms(delta, y_ref)
@@ -287,18 +325,22 @@ def step(model, st: BDFState, t_limit, iinj, opts: BDFOptions) -> BDFState:
                                 crate)
             dcon = dnrm * jnp.minimum(1.0, crate_n) / tq4
             conv = dcon < 1.0
+            if deliver is not None:
+                conv = jnp.logical_or(conv, deliver)
             div = jnp.logical_and(m >= 1, dnrm > RDIV * jnp.maximum(delp, 1e-300))
-            return (y, acor, dnrm, crate_n, m + 1, conv, div, nni + 1, nfe + 1)
+            return (y, acor, dnrm, crate_n, m + 1, conv, div, nni + 1, nfe + 1,
+                    f_keep)
 
         def newton_cond(c):
-            _, _, _, _, m, conv, div, _, _ = c
+            m, conv, div = c[4], c[5], c[6]
             return jnp.logical_and(m < MAX_NEWTON,
                                    jnp.logical_and(~conv, ~div))
 
         init = (ypred, jnp.zeros_like(ypred), jnp.zeros((), dtype),
                 jnp.ones((), dtype), jnp.zeros((), jnp.int32),
-                jnp.zeros((), bool), jnp.zeros((), bool), st.nni, st.nfe)
-        y, acor, _, _, _, conv, _, nni, nfe = jax.lax.while_loop(
+                jnp.zeros((), bool), jnp.zeros((), bool), st.nni, st.nfe,
+                f_first)
+        y, acor, _, _, _, conv, _, nni, nfe, f_first = jax.lax.while_loop(
             newton_cond, newton_body, init)
         st = st._replace(nni=nni, nfe=nfe)
 
@@ -322,9 +364,14 @@ def step(model, st: BDFState, t_limit, iinj, opts: BDFOptions) -> BDFState:
             q = jnp.where(force, jnp.ones((), jnp.int32), st.q)
             eta = jnp.where(force, jnp.asarray(ETAMIN_EF, dtype), eta)
             zn, h = _rescale(st.zn, st.tau, st.h, q, eta)
-            # when forcing q=1, rebuild zn[1] from f
+            # when forcing q=1, rebuild zn[1] = h * f(t, zn[0]) (CVODE's
+            # small-NEF restart): after MAX_NEF rescales the history row is
+            # no longer a valid first-derivative term, so the retry would
+            # keep solving a corrupted BDF1 equation
+            zn = jnp.where(force, zn.at[1].set(h * f_restart), zn)
             st = st._replace(zn=zn, h=h, q=q, etamax=jnp.asarray(1.0, dtype),
-                             netf=st.netf + 1)
+                             netf=st.netf + 1,
+                             nfe=st.nfe + jnp.where(force, 1, 0))
             return st, ncf, nef + 1
 
         def on_accept(st, ncf, nef):
@@ -387,6 +434,10 @@ def step(model, st: BDFState, t_limit, iinj, opts: BDFOptions) -> BDFState:
 
         err_ok = dsm <= 1.0
         accepted = jnp.logical_and(conv, err_ok)
+        if deliver is not None:
+            # deliver lanes terminate after one attempt; their step state
+            # is discarded by the caller in favour of the order-1 reset
+            accepted = jnp.logical_or(accepted, deliver)
 
         st_cf, ncf_cf, nef_cf = on_conv_fail(st, ncf, nef)
         st_ef, ncf_ef, nef_ef = on_err_fail(st, ncf, nef)
@@ -401,21 +452,47 @@ def step(model, st: BDFState, t_limit, iinj, opts: BDFOptions) -> BDFState:
         give_up = jnp.logical_or(ncf >= MAX_NCF,
                                  jnp.logical_or(nef >= MAX_NEF + 3,
                                                 attempts + 1 >= MAX_ATTEMPTS))
+        if deliver is not None:
+            give_up = jnp.logical_and(give_up, ~deliver)
         st = st._replace(failed=jnp.logical_or(st.failed, give_up))
         done = jnp.logical_or(accepted, give_up)
-        return st, ncf, nef, attempts + 1, done
+        return st, ncf, nef, attempts + 1, done, f_first
 
     def attempt_cond(carry):
-        _, _, _, _, done = carry
-        return ~done
+        return ~carry[4]
 
     z32 = jnp.zeros((), jnp.int32)
-    st, *_ = jax.lax.while_loop(attempt_cond, attempt_body,
-                                (st, z32, z32, z32, jnp.zeros((), bool)))
+    st, _, _, _, _, f_first = jax.lax.while_loop(
+        attempt_cond, attempt_body,
+        (st, z32, z32, z32, jnp.zeros((), bool), jnp.zeros_like(y_ref)))
     # snap to t_limit when within rounding distance
     snap = (t_limit - st.t) < 1e-10
     st = st._replace(t=jnp.where(snap, t_limit, st.t))
-    return st
+    return st, f_first
+
+
+def step_or_deliver(model, st: BDFState, t_limit, w_ampa, w_gaba, deliver,
+                    iinj, opts: BDFOptions) -> BDFState:
+    """Fused branch of the vardt advance loop: one rhs + Hines-solve stream
+    serves both the event-delivery reset and the BDF step.
+
+    ``deliver`` (bool[]) selects per lane: True -> apply the synaptic
+    discontinuity at the current time and reset the IVP (order 1, fresh h,
+    history discarded — ``deliver_event`` semantics, bit-identical);
+    False -> one accepted BDF step clamped at ``t_limit`` (``step``
+    semantics, bit-identical).  The deliver lanes ride the step's Newton
+    machinery so the reset's rhs evaluation is the corrector's first —
+    under vmap the advance loop pays ONE evaluation stream per iteration
+    instead of one per branch.
+    """
+    y_ev = model.apply_event(st.zn[0], w_ampa, w_gaba)
+    st_stepped, f_ev = _step_impl(model, st, t_limit, iinj, opts,
+                                  deliver=deliver, y_ev=y_ev)
+    counters = (st.nst, st.nfe + 1, st.nni, st.netf, st.nncf, st.nreset + 1)
+    st_del = reinit(model, st.t, y_ev, iinj, opts, counters=counters, f=f_ev)
+    st_del = st_del._replace(failed=st.failed)
+    return jax.tree_util.tree_map(
+        lambda d, s: jnp.where(deliver, d, s), st_del, st_stepped)
 
 
 def advance_to(model, st: BDFState, t_target, iinj, opts: BDFOptions,

@@ -39,6 +39,8 @@ class RunResult(NamedTuple):
     dropped: jnp.ndarray       # event-queue overflow (must be 0)
     failed: jnp.ndarray        # integrator failures (must be 0)
     y_final: jnp.ndarray       # [N, n_state] (vardt: zn[0])
+    sched: object = None       # xc.SchedStats active-set telemetry (vardt
+                               # runners; None where not collected)
 
 
 def make_bsp_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
@@ -113,6 +115,11 @@ def make_vardt_advance(model: CellModel, opts: bdf.BDFOptions,
         -> (st, eq_t, spiked, t_spike, n_deliv, n_resets)
     designed for vmap over neurons.  Non-speculative: the BDF step is clamped
     (tstop) at min(horizon, next event time) so no step ever crosses an event.
+
+    The deliver/step branches are fused through ``bdf.step_or_deliver``:
+    one rhs + Hines-solve stream per loop iteration serves both (the
+    delivery reset's rhs is the Newton corrector's first evaluation)
+    instead of each branch paying its own full evaluation per iteration.
     """
 
     def advance(st: bdf.BDFState, eq_t, eq_a, eq_g, horizon, active, iinj_n):
@@ -123,26 +130,25 @@ def make_vardt_advance(model: CellModel, opts: bdf.BDFOptions,
             deliver_now = jnp.logical_and(run, due <= st.t + 1e-12)
             step_now = jnp.logical_and(run, ~deliver_now)
 
-            # --- grouped delivery at current time -------------------------
+            # --- grouped delivery weights at current time -----------------
             mask = eq_t <= due + eg_window + 1e-12
             wa = jnp.sum(jnp.where(mask, eq_a, 0.0))
             wg = jnp.sum(jnp.where(mask, eq_g, 0.0))
-            st_d = bdf.deliver_event(model, st, wa, wg, iinj_n, opts)
-            eq_t_d = jnp.where(mask, jnp.inf, eq_t)
 
-            # --- one BDF step, clamped at horizon / next event ------------
+            # --- fused: event reset OR one BDF step clamped at the horizon
+            # / next event — a single shared evaluation stream -------------
             t_lim = jnp.minimum(horizon, due)
             v_prev = st.zn[0][model.idx_vsoma]
             t_prev = st.t
-            st_s = bdf.step(model, st, t_lim, iinj_n, opts)
-            sp, tsp = xc.detect_spikes(v_prev, st_s.zn[0][model.idx_vsoma],
-                                       t_prev, st_s.t)
+            st_n = bdf.step_or_deliver(model, st, t_lim, wa, wg, deliver_now,
+                                       iinj_n, opts)
+            sp, tsp = xc.detect_spikes(v_prev, st_n.zn[0][model.idx_vsoma],
+                                       t_prev, st_n.t)
 
             st = jax.tree_util.tree_map(
-                lambda d, s, o: jnp.where(deliver_now, d,
-                                          jnp.where(step_now, s, o)),
-                st_d, st_s, st)
-            eq_t = jnp.where(deliver_now, eq_t_d, eq_t)
+                lambda n_, o: jnp.where(run, n_, o), st_n, st)
+            eq_t = jnp.where(deliver_now, jnp.where(mask, jnp.inf, eq_t),
+                             eq_t)
             new_spike = jnp.logical_and(step_now, sp)
             spiked = jnp.logical_or(spiked, new_spike)
             t_sp = jnp.where(new_spike, tsp, t_sp)
@@ -162,9 +168,24 @@ def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                           eg_window: float = 0.0, window: float = 0.1,
                           step_budget: int = 8, ev_cap: int = EV_CAP,
                           queue: str = "dense",
-                          wheel: sched.WheelSpec = sched.WheelSpec()):
-    """Method 2b: CVODE under BSP — barrier at every communication window."""
+                          wheel: sched.WheelSpec = sched.WheelSpec(),
+                          batch: str = "dense", batch_cap: int = 0,
+                          n_bisect: int = 48):
+    """Method 2b: CVODE under BSP — barrier at every communication window.
+
+    batch: "dense" vmaps the vardt advance over all N neurons per window;
+    "compact" gathers only the lanes still behind the barrier into
+    ``batch_cap``-wide dispatches (compact -> step -> scatter), chunking
+    the window's frontier by earliest clock.  Every lane is advanced
+    exactly once per window with the same barrier horizon either way, so
+    compact spike trains are event-for-event identical to dense at ANY
+    cap (chunks, unlike the FAP round's roll-over, never change a lane's
+    horizon).  batch_cap <= 0 means N.
+    """
+    if batch not in ("dense", "compact"):
+        raise ValueError(f"unknown batch mode {batch!r}")
     n = net.n
+    cap = n if batch_cap <= 0 else min(int(batch_cap), n)
     dnet = xc.to_device(net)
     qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
     qinsert = sched.edge_insert(qops, net)
@@ -172,19 +193,64 @@ def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
     iinj = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
     advance = make_vardt_advance(model, opts, eg_window, step_budget)
     vadvance = jax.vmap(advance)
+    neuron_ids = jnp.arange(n, dtype=jnp.int32)     # hoisted round constant
 
     def window_body(carry, w_idx):
-        sts, eq, rec, n_ev, n_rs = carry
+        sts, eq, rec, n_ev, n_rs, stats = carry
         w_end = (w_idx + 1.0) * window
         horizon = jnp.full((n,), 1.0) * w_end          # global barrier
-        active = jnp.ones((n,), bool)
-        sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
-            sts, eq.t, eq.w_ampa, eq.w_gaba, horizon, active, iinj)
-        eq = eq._replace(t=eq_t)
-        rec = ev.record_spikes(rec, jnp.arange(n), t_sp, spiked)
+        behind = sts.t < w_end - 1e-12
+        n_behind = behind.sum(dtype=jnp.int64)
+
+        if batch == "compact":
+            def chunk_cond(c):
+                return c[-1].any()
+
+            def chunk_body(c):
+                sts, eq, spiked, t_sp, nd, nrs, stepped, disp, todo = c
+                ids, _ = xc.compact_frontier(todo, sts.t, cap, n_bisect)
+                lane_ok = ids < n
+                idc = jnp.minimum(ids, n - 1)
+                sts_b = xc.gather_lanes(sts, idc)
+                eqt_b, eqa_b, eqg_b = sched.gather_rows(eq, idc)
+                sts_b, eqt_b, spk_b, tsp_b, nd_b, nrs_b = vadvance(
+                    sts_b, eqt_b, eqa_b, eqg_b, horizon[idc], lane_ok,
+                    iinj[idc])
+                sts = xc.scatter_lanes(sts, sts_b, ids)
+                eq = sched.scatter_rows(eq, ids, eqt_b)
+                spiked = xc.scatter_at(spiked, ids, spk_b)
+                t_sp = xc.scatter_at(t_sp, ids, tsp_b)
+                todo = xc.scatter_at(todo, ids, False)
+                return (sts, eq, spiked, t_sp,
+                        nd + nd_b.sum(dtype=jnp.int32),
+                        nrs + nrs_b.sum(dtype=jnp.int32),
+                        stepped + lane_ok.sum(dtype=jnp.int64),
+                        disp + 1, todo)
+
+            z = jnp.zeros((), jnp.int32)
+            sts, eq, spiked, t_sp, nd, nrs, stepped, disp, _ = \
+                jax.lax.while_loop(chunk_cond, chunk_body,
+                                   (sts, eq, jnp.zeros((n,), bool),
+                                    jnp.zeros((n,)), z, z,
+                                    jnp.zeros((), jnp.int64), z, behind))
+            stats = xc.SchedStats(stats.runnable + n_behind,
+                                  stats.stepped + stepped,
+                                  stats.lanes + disp.astype(jnp.int64) * cap,
+                                  stats.rounds + disp)
+        else:
+            active = jnp.ones((n,), bool)
+            sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
+                sts, eq.t, eq.w_ampa, eq.w_gaba, horizon, active, iinj)
+            eq = eq._replace(t=eq_t)
+            nd, nrs = nd.sum(dtype=jnp.int32), nrs.sum(dtype=jnp.int32)
+            stats = xc.SchedStats(stats.runnable + n_behind,
+                                  stats.stepped + n_behind,
+                                  stats.lanes + n,
+                                  stats.rounds + 1)
+        rec = ev.record_spikes(rec, neuron_ids, t_sp, spiked)
         tgt, t_ev, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
         eq = qinsert(eq, tgt, t_ev, wa, wg, valid)
-        return (sts, eq, rec, n_ev + nd.sum(dtype=jnp.int32), n_rs + nrs.sum(dtype=jnp.int32)), None
+        return (sts, eq, rec, n_ev + nd, n_rs + nrs, stats), None
 
     @jax.jit
     def run():
@@ -192,12 +258,13 @@ def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
         sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj)
         eq = qops.make(n)
         rec = ev.make_spike_record(n, SPK_CAP)
-        (sts, eq, rec, n_ev, n_rs), _ = jax.lax.scan(
+        (sts, eq, rec, n_ev, n_rs, stats), _ = jax.lax.scan(
             window_body,
-            (sts, eq, rec, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)),
+            (sts, eq, rec, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+             xc.SchedStats.zeros()),
             jnp.arange(n_windows))
         return RunResult(rec, sts.nst.sum(), n_ev, n_rs, eq.dropped,
-                         sts.failed.any(), sts.zn[:, 0])
+                         sts.failed.any(), sts.zn[:, 0], stats)
 
     return run
 

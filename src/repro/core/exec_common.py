@@ -87,6 +87,145 @@ def runnable_mask(t_clock, horizon, eps: float = 1e-12):
     return t_clock < horizon - eps
 
 
+# ---------------------------------------------------------------------------
+# active-set compaction: step only the runnable frontier
+# ---------------------------------------------------------------------------
+class SchedStats(NamedTuple):
+    """Per-run active-set telemetry accumulated over scheduler rounds.
+
+    ``runnable`` sums the runnable-frontier size offered to the stepper
+    each round; ``stepped`` the lanes that actually advanced; ``lanes``
+    the lanes *dispatched* (vmap width: N on the dense path, ``batch_cap``
+    per compact dispatch).  ``stepped / lanes`` is the realized batch
+    occupancy and ``1 - stepped / lanes`` the wasted-lane fraction — the
+    dense-masking overhead the compact path removes.
+    """
+    runnable: jnp.ndarray      # i64[] sum over rounds of runnable lanes
+    stepped: jnp.ndarray       # i64[] sum of lanes that actually advanced
+    lanes: jnp.ndarray         # i64[] sum of lanes dispatched to the stepper
+    rounds: jnp.ndarray        # i32[] scheduler rounds (compact: dispatches)
+
+    @staticmethod
+    def zeros() -> "SchedStats":
+        z64 = jnp.zeros((), jnp.int64)
+        return SchedStats(z64, z64, z64, jnp.zeros((), jnp.int32))
+
+
+def sched_metrics(stats: SchedStats) -> dict:
+    """Host-side summary of ``SchedStats`` (floats, safe for zero rounds)."""
+    lanes = max(1, int(stats.lanes))
+    return {
+        "rounds": int(stats.rounds),
+        "runnable_per_round": float(stats.runnable) / max(1, int(stats.rounds)),
+        "occupancy": float(stats.stepped) / lanes,
+        "wasted_lane_frac": 1.0 - float(stats.stepped) / lanes,
+    }
+
+
+def select_active(runnable, t_clock, cap: int, n_iters: int = 48):
+    """Earliest-``cap`` restriction of the runnable frontier, sort-free.
+
+    When more than ``cap`` neurons are runnable, keep those with the
+    smallest clocks (``select_threshold`` bisection on counts — the same
+    machinery as the explicit-scheduler ``k_select``); with ``cap`` or
+    fewer runnable the mask is returned unchanged (the threshold lands on
+    the maximum finite score).  The globally earliest runnable neuron is
+    always kept, so the conservative-lookahead progress argument of
+    ``exec_fap`` holds under any cap; clock ties beyond ``cap`` are
+    resolved by the compaction's index order and simply roll to a later
+    dispatch.
+    """
+    from repro.kernels.event_wheel import ops as ew_ops
+    score = jnp.where(runnable, t_clock, jnp.inf)
+    tau = ew_ops.select_threshold(score, cap, n_iters=n_iters)
+    return jnp.logical_and(runnable, score <= tau)
+
+
+def out_post_table(net) -> np.ndarray:
+    """Host-side static out-neighbour table: row i lists the postsynaptic
+    targets of neuron i's out-edges, padded with the sentinel N.
+
+    The compact FAP round uses it for *incremental* horizon maintenance:
+    when only the [batch_cap] advanced lanes moved, the only horizon rows
+    that can change are their out-neighbours (plus the lanes' own
+    clock-cap terms) — O(cap * max_out_degree) per round instead of the
+    O(E) full scatter-min.
+    """
+    pre = np.asarray(net.pre)
+    post = np.asarray(net.post)
+    n, E = int(net.n), int(pre.shape[0])
+    deg = np.bincount(pre, minlength=n)
+    mo = int(deg.max()) if E else 1
+    order = np.argsort(pre, kind="stable")
+    starts = np.zeros(n + 1, np.int64)
+    starts[1:] = np.cumsum(deg)
+    rank_in_pre = np.arange(E) - starts[pre[order]]
+    table = np.full((n, mo), n, np.int32)
+    table[pre[order], rank_in_pre] = post[order]
+    return table
+
+
+def compact_frontier(runnable, t_clock, cap: int, n_iters: int = 48):
+    """Select + compact the runnable frontier into a [cap] gather-id batch.
+
+    Returns (ids i32[cap] — unique lane ids, sentinel N for empty slots;
+    count i32 — selected lanes, may exceed cap when the frontier
+    overflows: the overflow rolls to a later dispatch).  When the cap
+    binds, the earliest-clock lanes are kept (``select_active``) and the
+    globally earliest runnable lane is *force-included*: bisection-
+    resolution clock ties can otherwise crowd the frontier head out of
+    the index-ordered compaction, which would starve the one neuron the
+    conservative-lookahead progress argument depends on.
+    """
+    from repro.kernels.event_wheel import ops as ew_ops
+    n = t_clock.shape[0]
+    sel = select_active(runnable, t_clock, cap, n_iters) if cap < n \
+        else runnable
+    ids, cnt = ew_ops.compact_ids(sel, cap)
+    if cap < n:
+        score = jnp.where(runnable, t_clock, jnp.inf)
+        earliest = jnp.argmin(score).astype(ids.dtype)
+        have = jnp.logical_or((ids == earliest).any(), ~runnable.any())
+        last = jnp.maximum(jnp.minimum(cnt, cap) - 1, 0)
+        ids = jnp.where(have, ids, ids.at[last].set(earliest))
+    return ids, cnt
+
+
+def gather_lanes(sts, ids_clipped):
+    """Gather the per-neuron pytree rows of a compacted id list."""
+    return jax.tree_util.tree_map(lambda x: x[ids_clipped], sts)
+
+
+def unique_pad_ids(ids, n: int):
+    """Remap sentinel padding (>= n) to distinct out-of-range ids so the
+    scatters can claim ``unique_indices`` — without it XLA's duplicate-safe
+    sequential scatter path dominates the compact round's cost."""
+    pad = n + jnp.arange(ids.shape[0], dtype=ids.dtype)
+    return jnp.where(ids < n, ids, pad)
+
+
+def scatter_at(full, ids, vals):
+    """``full.at[ids].set(vals)`` for a compacted id list: sentinel padding
+    (>= N) is dropped and the write claims ``unique_indices`` via
+    ``unique_pad_ids`` — the batch -> full-width store every compact path
+    shares (single arrays here, pytrees via ``scatter_lanes``)."""
+    ids_u = unique_pad_ids(ids, full.shape[0])
+    return full.at[ids_u].set(vals, mode="drop", unique_indices=True)
+
+
+def scatter_lanes(full, batch, ids):
+    """Scatter advanced lanes back; sentinel ids (>= N) are dropped.
+
+    ``ids`` must hold unique in-range entries (the compaction guarantees
+    it) — the write is issued with ``unique_indices=True``.
+    """
+    n = jax.tree_util.tree_leaves(full)[0].shape[0]
+    ids_u = unique_pad_ids(ids, n)
+    return jax.tree_util.tree_map(
+        lambda f, b: f.at[ids_u].set(b, mode="drop", unique_indices=True),
+        full, batch)
+
+
 def spike_rates(rec: ev.SpikeRecord, t_lo: float, t_hi: float):
     """Per-neuron firing rate (Hz) in a window; times in ms."""
     m = jnp.logical_and(rec.times >= t_lo, rec.times < t_hi)

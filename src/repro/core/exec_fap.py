@@ -54,6 +54,7 @@ def make_fap_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
     step = make_stepper(model, method, dt)
     vstep = jax.vmap(step)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
+    neuron_ids = jnp.arange(n, dtype=jnp.int32)     # hoisted round constant
     n_total_steps = int(round(t_end / dt))
 
     def round_body(carry):
@@ -80,7 +81,7 @@ def make_fap_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
             k = jnp.where(act, k + 1, k)
             spiked_r = jnp.logical_or(spiked_r, sp)
             t_sp_r = jnp.where(sp, tsp, t_sp_r)
-            rec = ev.record_spikes(rec, jnp.arange(n), tsp, sp)
+            rec = ev.record_spikes(rec, neuron_ids, tsp, sp)
             return (Y, k, eq2, rec, n_ev + cnt.sum(dtype=jnp.int32), n_st + act.sum(dtype=jnp.int32), spiked_r, t_sp_r)
 
         Y, k, eq, rec, n_ev, n_st, spiked_r, t_sp_r = jax.lax.fori_loop(
@@ -116,7 +117,8 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                           queue: str = "dense",
                           wheel: sched.WheelSpec = sched.WheelSpec(),
                           select: str = "sort", horizon_impl: str = "scatter",
-                          n_bisect: int = 48):
+                          n_bisect: int = 48, batch: str = "dense",
+                          batch_cap: int = 0):
     """Variable-step FAP (method 2c, the paper's reference method).
 
     eg_window: 0 -> precise delivery (2c-);  dt/2 or dt -> grouped variants.
@@ -130,10 +132,38 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                   counts — no sort primitive in the round's jaxpr).
     horizon_impl: "scatter" (edge scatter-min) or "fused" (Pallas kernel
                   over the static by-post layout — kernels/event_wheel).
+    batch:        "dense" vmaps the step machinery over all N neurons every
+                  round; "compact" compacts the runnable mask into a
+                  gather-id list, advances only a fixed-size [batch_cap]
+                  batch and scatters results back — per-round stepping
+                  cost O(batch_cap * step_budget) instead of
+                  O(N * step_budget).  When the frontier overflows
+                  batch_cap the earliest-clock neurons are kept
+                  (``select_threshold`` bisection; the globally earliest
+                  neuron is always included, preserving the conservative-
+                  lookahead progress argument) and overflowed neurons
+                  roll to the next round.  batch_cap <= 0 means N.
+                  Two further compact-only structural savings keep the
+                  round ~flat in N at fixed cap: the O(E) fan-out/insert
+                  runs under a ``lax.cond`` (a semantic no-op on
+                  spike-free rounds, the common case off the burst
+                  regimes), and with the scatter horizon on a grouped net
+                  the dependency horizon is maintained *incrementally* —
+                  only rows whose pre clocks moved (the batch's
+                  out-neighbours) are recomputed, bit-identical to the
+                  full scatter-min because min is exact in fp.
+
+    The returned nullary runner also exposes ``run.init_carry`` /
+    ``run.round_body`` / ``run.cond`` so benchmarks can drive and time
+    single scheduler rounds.
     """
     n = net.n
+    if batch not in ("dense", "compact"):
+        raise ValueError(f"unknown batch mode {batch!r}")
+    cap = n if batch_cap <= 0 else min(int(batch_cap), n)
     dnet = xc.to_device(net)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
+    neuron_ids = jnp.arange(n, dtype=jnp.int32)     # hoisted round constant
     advance = make_vardt_advance(model, opts, eg_window, step_budget)
     vadvance = jax.vmap(advance)
     qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
@@ -144,11 +174,37 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
         pre_byk, delay_byk = ew_ops.by_post_layout(net)
     elif horizon_impl != "scatter":
         raise ValueError(f"unknown horizon_impl {horizon_impl!r}")
+    # incremental horizon maintenance: compact + scatter impl + grouped net
+    incremental = (batch == "compact" and horizon_impl == "scatter"
+                   and sched.grouped_k(net) is not None)
+    if incremental:
+        pre_byk, delay_byk = ew_ops.by_post_layout(net)
+        out_post = jnp.asarray(xc.out_post_table(net))      # [N, MO], sent. n
+
+    def _horizon_rows(t_clock, p):
+        """Recompute horizon for the (sentinel-padded) post set ``p`` from
+        current clocks — the same min/clamp chain as the full scatter-min
+        (min is exact, so incremental == full, bitwise)."""
+        pc = jnp.minimum(p, n - 1)
+        cand = t_clock[pre_byk[:, pc]] + delay_byk[:, pc]     # [K, |p|]
+        hor_p = jnp.minimum(jnp.min(cand, axis=0), t_end)
+        return jnp.minimum(hor_p, t_clock[pc] + horizon_cap)
+
+    def _insert_spikes(eq, spiked_b, tsp_b, ids):
+        spiked = xc.scatter_at(jnp.zeros((n,), bool), ids, spiked_b)
+        t_sp = xc.scatter_at(jnp.zeros((n,)), ids, tsp_b)
+        tgt, t_evs, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
+        return qinsert(eq, tgt, t_evs, wa, wg, valid)
 
     def round_body(carry):
-        sts, eq, rec, n_ev, n_rs, rounds = carry
+        if incremental:
+            sts, eq, rec, horizon, n_ev, n_rs, stats, rounds = carry
+        else:
+            sts, eq, rec, n_ev, n_rs, stats, rounds = carry
         t_clock = sts.t
-        if horizon_impl == "fused":
+        if incremental:
+            runnable = xc.runnable_mask(t_clock, horizon)
+        elif horizon_impl == "fused":
             # fused kernel: min over in-edges + clamps + runnable (+ the
             # earliest-K threshold when selection is sort-free too)
             horizon, runnable = ew_ops.fused_horizon_select(
@@ -159,42 +215,101 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
             horizon = xc.horizon_times(dnet, n, t_clock, t_end,
                                        horizon_cap=horizon_cap)
             runnable = xc.runnable_mask(t_clock, horizon)
-            if k_select > 0 and select == "threshold":
-                score = jnp.where(runnable, t_clock, jnp.inf)
-                tau = ew_ops.select_threshold(score, k_select,
-                                              n_iters=n_bisect)
-                runnable = jnp.logical_and(runnable, score <= tau)
+        if k_select > 0 and select == "threshold" and \
+                (incremental or horizon_impl == "scatter"):
+            score = jnp.where(runnable, t_clock, jnp.inf)
+            tau = ew_ops.select_threshold(score, k_select, n_iters=n_bisect)
+            runnable = jnp.logical_and(runnable, score <= tau)
         if k_select > 0 and select == "sort":
             # earliest-neuron-steps-next: keep only the K earliest runnable
             score = jnp.where(runnable, t_clock, jnp.inf)
             kth = jnp.sort(score)[min(k_select, n) - 1]
             runnable = jnp.logical_and(runnable, score <= kth)
-        sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
-            sts, eq.t, eq.w_ampa, eq.w_gaba, horizon, runnable, iinj_v)
-        eq = eq._replace(t=eq_t)
-        rec = ev.record_spikes(rec, jnp.arange(n), t_sp, spiked)
-        tgt, t_evs, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
-        eq = qinsert(eq, tgt, t_evs, wa, wg, valid)
-        return sts, eq, rec, n_ev + nd.sum(dtype=jnp.int32), n_rs + nrs.sum(dtype=jnp.int32), rounds + 1
+        n_runnable = runnable.sum(dtype=jnp.int64)
+
+        if batch == "compact":
+            # --- compact -> step -> scatter: only the runnable frontier
+            # pays the step machinery ----------------------------------
+            ids, _ = xc.compact_frontier(runnable, t_clock, cap, n_bisect)
+            lane_ok = ids < n
+            idc = jnp.minimum(ids, n - 1)
+            sts_b = xc.gather_lanes(sts, idc)
+            t_b_prev = sts_b.t
+            eqt_b, eqa_b, eqg_b = sched.gather_rows(eq, idc)
+            sts_b, eqt_b, spiked_b, tsp_b, nd, nrs = vadvance(
+                sts_b, eqt_b, eqa_b, eqg_b, horizon[idc], lane_ok,
+                iinj_v[idc])
+            sts = xc.scatter_lanes(sts, sts_b, ids)
+            eq = sched.scatter_rows(eq, ids, eqt_b)
+            rec = ev.record_spikes(rec, ids, tsp_b, spiked_b)
+            # O(E) fan-out + insert only on rounds that actually spiked
+            # (identical either way: zero spikes insert nothing)
+            eq = jax.lax.cond(spiked_b.any(), _insert_spikes,
+                              lambda eq, *_: eq, eq, spiked_b, tsp_b, ids)
+            if incremental:
+                # only rows fed by a moved clock can change: the batch's
+                # out-neighbours, plus the batch lanes' own cap terms
+                moved = jnp.logical_and(lane_ok, sts_b.t != t_b_prev)
+                outp = jnp.where(moved[:, None], out_post[idc], n)
+                p = jnp.concatenate([ids, outp.reshape(-1)])
+                horizon = horizon.at[p].set(_horizon_rows(sts.t, p),
+                                            mode="drop")
+            stats = xc.SchedStats(stats.runnable + n_runnable,
+                                  stats.stepped + lane_ok.sum(dtype=jnp.int64),
+                                  stats.lanes + cap,
+                                  stats.rounds + 1)
+        else:
+            sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
+                sts, eq.t, eq.w_ampa, eq.w_gaba, horizon, runnable, iinj_v)
+            eq = eq._replace(t=eq_t)
+            rec = ev.record_spikes(rec, neuron_ids, t_sp, spiked)
+            tgt, t_evs, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
+            eq = qinsert(eq, tgt, t_evs, wa, wg, valid)
+            stats = xc.SchedStats(stats.runnable + n_runnable,
+                                  stats.stepped + n_runnable,
+                                  stats.lanes + n,
+                                  stats.rounds + 1)
+        out = (sts, eq, rec, n_ev + nd.sum(dtype=jnp.int32),
+               n_rs + nrs.sum(dtype=jnp.int32), stats, rounds + 1)
+        if incremental:
+            out = out[:3] + (horizon,) + out[3:]
+        return out
 
     def cond(carry):
-        sts, _, _, _, _, rounds = carry
+        sts, rounds = carry[0], carry[-1]
         return jnp.logical_and(sts.t.min() < t_end - 1e-9,
                                jnp.logical_and(rounds < max_rounds,
                                                ~sts.failed.any()))
 
-    @jax.jit
-    def run():
+    def init_carry():
         Y = xc.batch_init(model, n)
         sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj_v)
         eq = qops.make(n)
         rec = ev.make_spike_record(n, SPK_CAP)
         z = jnp.zeros((), jnp.int32)
-        sts, eq, rec, n_ev, n_rs, rounds = jax.lax.while_loop(
-            cond, round_body, (sts, eq, rec, z, z, z))
-        return RunResult(rec, sts.nst.sum(), n_ev, n_rs, eq.dropped,
-                         sts.failed.any(), sts.zn[:, 0]), rounds
+        carry = sts, eq, rec, z, z, xc.SchedStats.zeros(), z
+        if incremental:
+            hor0 = xc.horizon_times(dnet, n, sts.t, t_end,
+                                    horizon_cap=horizon_cap)
+            carry = carry[:3] + (hor0,) + carry[3:]
+        return carry
 
+    @jax.jit
+    def _run():
+        out = jax.lax.while_loop(cond, round_body, init_carry())
+        if incremental:
+            sts, eq, rec, _, n_ev, n_rs, stats, rounds = out
+        else:
+            sts, eq, rec, n_ev, n_rs, stats, rounds = out
+        return RunResult(rec, sts.nst.sum(), n_ev, n_rs, eq.dropped,
+                         sts.failed.any(), sts.zn[:, 0], stats), rounds
+
+    def run():
+        return _run()
+
+    run.init_carry = init_carry
+    run.round_body = round_body
+    run.cond = cond
     return run
 
 

@@ -60,6 +60,7 @@ def make_spec_runner(model: CellModel, net: Network, iinj, t_end: float,
     qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
     qinsert = sched.edge_insert(qops, net)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
+    neuron_ids = jnp.arange(n, dtype=jnp.int32)     # hoisted round constant
     advance = make_vardt_advance(model, opts, 0.0, step_budget)
     vadvance = jax.vmap(advance)
 
@@ -98,7 +99,7 @@ def make_spec_runner(model: CellModel, net: Network, iinj, t_end: float,
         held_sp = jnp.logical_and(held_sp, ~emit_held)
         all_spiked = jnp.logical_or(spiked, emit_held)
         all_tsp = jnp.where(emit_held, held_t, t_sp)
-        rec = ev.record_spikes(rec, jnp.arange(n), all_tsp, all_spiked)
+        rec = ev.record_spikes(rec, neuron_ids, all_tsp, all_spiked)
         tgt, t_evs, wa, wg, validm = xc.fanout(dnet, all_spiked, all_tsp)
         eq = qinsert(eq, tgt, t_evs, wa, wg, validm)
 

@@ -74,7 +74,8 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
                     optimized: bool = False, queue: str = "dense",
                     wheel: sched.WheelSpec = sched.WheelSpec(),
                     transport: str = "allgather",
-                    exchange: ExchangeSpec = ExchangeSpec(), net=None):
+                    exchange: ExchangeSpec = ExchangeSpec(), net=None,
+                    batch: str = "dense", batch_cap: int = 0):
     """optimized=False: paper-faithful baseline — horizon scatter-min and
     event insert as *global* ops, lowered by GSPMD (collective-heavy: with
     queue="dense" the global argsort in the insert becomes a distributed
@@ -89,6 +90,16 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
     is the bucketed event-wheel scatter (repro.sched) — no sort of any
     kind, local or distributed.
 
+    batch="compact" compacts each shard's runnable mask into a local
+    gather-id list and advances only a fixed [batch_cap]-wide batch per
+    round (earliest-clock threshold selection on overflow, exactly the
+    single-host ``exec_fap`` semantics, here per shard) — composing with
+    the sparse transport (spiked/t_spike are scattered back to full
+    shard-width before the parcel exchange) and with placement (locality
+    shrinks the frontier the compact batch has to cover).  Shard-local
+    only: with ``optimized=False`` there is no shard-local stage to
+    compact and the knob is rejected.
+
     The round returns (sts, eq_t, eq_a, eq_g, spiked, t_spike, n_deliv,
     n_resets, dropped); ``dropped`` counts this round's queue overflow plus
     sparse-transport parcel overflow (detected, never silent).
@@ -101,6 +112,12 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
         raise ValueError("sparse transport realises the shard-local "
                          "(optimized=True) round; the global path has no "
                          "explicit channels to replace")
+    if batch not in ("dense", "compact"):
+        raise ValueError(f"unknown batch mode {batch!r}")
+    if batch == "compact" and not optimized:
+        raise ValueError("active-set compaction is shard-local "
+                         "(optimized=True); the global path has no "
+                         "shard-local advance stage to compact")
     n, E = spec.n_neurons, spec.n_neurons * spec.k_in
     flat = tuple(mesh.axis_names)                  # shard over ALL axes
     nshard = P(flat)
@@ -108,6 +125,7 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
     vadvance = jax.vmap(advance)
     n_shards = int(np.prod([mesh.shape[a] for a in flat]))
     n_local = n // n_shards
+    cap = n_local if batch_cap <= 0 else min(int(batch_cap), n_local)
     qops = sched.get_queue_ops(queue, ev_cap=spec.ev_cap, wheel=wheel)
     qcap = qops.capacity
     tp = get_transport(transport, mesh, n=n, net=net, spec=exchange) \
@@ -140,9 +158,23 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
                                    t_table=t_table,
                                    horizon_cap=spec.horizon_cap)
         runnable = xc.runnable_mask(t_local, horizon)
-        # --- advance ------------------------------------------------------
-        sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
-            sts, eq_t, eq_a, eq_g, horizon, runnable, iinj)
+        # --- advance (dense: all lanes; compact: the shard-local active
+        # set, gathered into a fixed [cap] batch and scattered back) -------
+        if batch == "compact":
+            ids, _ = xc.compact_frontier(runnable, t_local, cap)
+            lane_ok = ids < n_loc
+            idc = jnp.minimum(ids, n_loc - 1)
+            sts_b = xc.gather_lanes(sts, idc)
+            sts_b, eqt_b, spiked_b, tsp_b, nd, nrs = vadvance(
+                sts_b, eq_t[idc], eq_a[idc], eq_g[idc], horizon[idc],
+                lane_ok, iinj[idc])
+            sts = xc.scatter_lanes(sts, sts_b, ids)
+            eq_t = xc.scatter_at(eq_t, ids, eqt_b)
+            spiked = xc.scatter_at(jnp.zeros((n_loc,), bool), ids, spiked_b)
+            t_sp = xc.scatter_at(jnp.zeros((n_loc,)), ids, tsp_b)
+        else:
+            sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
+                sts, eq_t, eq_a, eq_g, horizon, runnable, iinj)
         # --- parcel exchange ----------------------------------------------
         spiked_all, tsp_all, pdrop = tp.exchange(spiked, t_sp, *targs)
         # --- insert (shard-local, grouped) --------------------------------
@@ -228,7 +260,7 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
                  exchange: ExchangeSpec = ExchangeSpec(),
                  ev_cap: int = 32, horizon_cap: float = 2.0,
                  max_rounds: int = 400, spk_cap: int = 128,
-                 placement=None):
+                 placement=None, batch: str = "dense", batch_cap: int = 0):
     """Drive the SPMD round to t_end on a concrete network; the host loop
     records spike trains and accumulates the per-round telemetry into the
     standard ``RunResult`` (dropped = queue + parcel overflow — detected,
@@ -239,6 +271,10 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
     before sharding and inverted on the returned spike record / final
     state, so results stay in the caller's neuron order while the notify
     frontier and parcel routing shrink with the realized locality.
+
+    batch / batch_cap: forwarded to ``build_fap_round`` — "compact" runs
+    the shard-local advance on the compacted runnable frontier only
+    (``RunResult.sched`` telemetry is not collected on the SPMD path).
     """
     from repro.core import events as ev
     from repro.core.exec_bsp import RunResult
@@ -260,7 +296,8 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
     fn, ex_args, in_sh = build_fap_round(model, spec, mesh, opts,
                                          optimized=optimized, queue=queue,
                                          wheel=wheel, transport=transport,
-                                         exchange=exchange, net=net)
+                                         exchange=exchange, net=net,
+                                         batch=batch, batch_cap=batch_cap)
     qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
     Y = xc.batch_init(model, n)
@@ -275,12 +312,13 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
         + ex_args[10:], in_sh[4:])
     jfn = jax.jit(fn, in_shardings=in_sh)
     rec = ev.make_spike_record(n, spk_cap)
+    neuron_ids = jnp.arange(n, dtype=jnp.int32)    # hoisted round constant
     n_ev = n_rs = n_drop = 0
     rounds = 0
     while rounds < max_rounds:
         sts, eq_t, eq_a, eq_g, spiked, t_sp, nd, nrs, dropped = jfn(
             sts, eq_t, eq_a, eq_g, *static)
-        rec = ev.record_spikes(rec, jnp.arange(n), t_sp, spiked)
+        rec = ev.record_spikes(rec, neuron_ids, t_sp, spiked)
         n_ev += int(nd)
         n_rs += int(nrs)
         n_drop += int(dropped)

@@ -84,6 +84,60 @@ def _compact_kernel(mask_ref, vals_ref, idx_ref, val_ref, cnt_ref, *, cap, m):
     cnt_ref[...] = total[None, None].astype(jnp.int32)
 
 
+def _compact_ids_kernel(mask_ref, ids_ref, cnt_ref, *, cap, bn):
+    """Blocked 1-D generalisation of ``_compact_kernel`` emitting gather
+    indices: the grid walks the mask in BN-wide blocks carrying the running
+    set-lane count in ``cnt_ref``, so the one-hot placement tile stays
+    [cap, BN] regardless of N (the row-at-once [cap, M] tile of the parcel
+    packer would blow VMEM at frontier-mask lengths).  Ids are accumulated
+    +1-biased so empty slots read 0 until the wrapper rewrites them to the
+    sentinel."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        ids_ref[...] = jnp.zeros((1, cap), jnp.int32)
+        cnt_ref[...] = jnp.zeros((1, 1), jnp.int32)
+
+    base = cnt_ref[0, 0]
+    msk = mask_ref[...]                            # [1, BN] i32
+    csum = jnp.cumsum(msk, axis=-1).astype(jnp.int32)
+    pos = base + csum - msk                        # global rank where mask=1
+    slot = jax.lax.broadcasted_iota(jnp.int32, (cap, bn), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (cap, bn), 1)
+    hit = jnp.logical_and(pos == slot, msk == 1)   # [cap, BN]
+    gid1 = step * bn + col + 1                     # global index, +1-biased
+    upd = jnp.sum(jnp.where(hit, gid1, 0), axis=1).astype(jnp.int32)
+    ids_ref[...] += upd[None, :]
+    cnt_ref[...] = (base + csum[0, -1]).astype(jnp.int32)[None, None]
+
+
+def compact_ids_pallas(mask, *, cap: int, block_n: int = BN_DEFAULT,
+                       interpret: bool = True):
+    """Compact a bool[N] mask into the gather-id list of its set lanes.
+
+    Returns (ids i32[cap] — indices of the first ``cap`` set lanes in
+    index order, sentinel N for empty slots; count i32 — total set lanes,
+    may exceed cap).  N must be a multiple of block_n (the ops wrapper
+    pads with zeros).
+    """
+    (N,) = mask.shape
+    assert N % block_n == 0, (N, block_n)
+    kernel = functools.partial(_compact_ids_kernel, cap=cap, bn=block_n)
+    acc, cnt = pl.pallas_call(
+        kernel,
+        grid=(N // block_n,),
+        in_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i))],
+        out_specs=(pl.BlockSpec((1, cap), lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((1, cap), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)),
+        interpret=interpret,
+    )(mask.astype(jnp.int32).reshape(1, N))
+    ids = jnp.where(acc[0] > 0, acc[0] - 1, N).astype(jnp.int32)
+    return ids, cnt[0, 0]
+
+
 def compact_rows_pallas(mask, values, *, cap: int, interpret: bool = True):
     """Row-wise sort-free stream compaction (the spike-parcel packer).
 

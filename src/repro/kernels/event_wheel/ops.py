@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import use_interpret
 from repro.kernels.event_wheel.event_wheel import (BN_DEFAULT,
+                                                   compact_ids_pallas,
                                                    compact_rows_pallas,
                                                    horizon_score_pallas)
 
@@ -94,6 +95,37 @@ def spike_compact(mask, values, cap: int, *, impl: str = "pallas"):
         from repro.kernels.event_wheel import ref
         return ref.compact_rows_ref(mask, values, cap=cap)
     raise ValueError(f"unknown spike_compact impl {impl!r}")
+
+
+def compact_ids(mask, cap: int, *, impl: str = "auto",
+                block_n: int = BN_DEFAULT):
+    """Compact a bool[N] runnable mask into a gather-id list — the active
+    set of the compact–step–scatter execution path (``batch="compact"``).
+
+    Returns (ids i32[cap] — indices of the first ``cap`` set lanes in
+    index order, sentinel N for empty slots; count i32 — total set lanes,
+    which may exceed cap: the overflow rolls to a later dispatch, never
+    drops).  The same cumsum-rank machinery as ``spike_compact``,
+    generalised to emit the indices themselves: ``impl="pallas"`` runs the
+    blocked [cap, BN] one-hot kernel, ``"jnp"`` the O(N) scatter oracle;
+    ``"auto"`` picks pallas on real TPU and the scatter oracle elsewhere
+    (interpret-mode grids walk the blocks in python).
+    """
+    if impl == "auto":
+        impl = "jnp" if use_interpret() else "pallas"
+    if impl == "jnp":
+        from repro.kernels.event_wheel import ref
+        return ref.compact_ids_ref(mask, cap)
+    if impl != "pallas":
+        raise ValueError(f"unknown compact_ids impl {impl!r}")
+    (n,) = mask.shape
+    n_pad = (-n) % block_n
+    m = mask
+    if n_pad:
+        m = jnp.concatenate([m, jnp.zeros((n_pad,), m.dtype)])
+    ids, cnt = compact_ids_pallas(m, cap=cap, block_n=block_n,
+                                  interpret=use_interpret())
+    return jnp.minimum(ids, n).astype(jnp.int32), cnt
 
 
 def by_post_layout(net):

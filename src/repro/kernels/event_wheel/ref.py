@@ -25,6 +25,21 @@ def select_earliest_ref(score, k: int):
     return jnp.logical_and(jnp.isfinite(score), score <= kth)
 
 
+def compact_ids_ref(mask, cap: int):
+    """Pure-jnp gather-id compaction: cumsum ranks + one masked scatter
+    (O(N), sort-free).  Returns (ids i32[cap] — indices of the first
+    ``cap`` set lanes in index order, sentinel N for empty slots; count
+    i32 — total set lanes, may exceed cap)."""
+    n = mask.shape[0]
+    msk = mask.astype(jnp.int32)
+    csum = jnp.cumsum(msk)
+    pos = csum - msk
+    slot = jnp.where(jnp.logical_and(msk == 1, pos < cap), pos, cap)
+    ids = jnp.full((cap,), n, jnp.int32).at[slot].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return ids, csum[-1] if n else jnp.zeros((), jnp.int32)
+
+
 def compact_rows_ref(mask, values, *, cap: int):
     """Pure-jnp oracle for the spike-compaction kernel: cumsum ranks + a
     masked scatter (still sort-free — the dense-queue argsort is the thing

@@ -9,8 +9,9 @@
 The matching Pallas kernel (fused horizon scatter-min + runnable mask +
 earliest-K threshold selection) lives in ``repro.kernels.event_wheel``.
 """
-from repro.sched.api import (QueueOps, edge_insert, get_queue_ops,  # noqa: F401
-                             grouped_k, jaxpr_primitives)
+from repro.sched.api import (QueueOps, edge_insert, gather_rows,  # noqa: F401
+                             get_queue_ops, grouped_k, jaxpr_primitives,
+                             scatter_rows)
 from repro.sched.wheel import (WheelQueue, WheelSpec,  # noqa: F401
                                bucket_occupancy, deliver_until, insert,
                                insert_grouped, make_wheel, next_time,

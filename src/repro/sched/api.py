@@ -62,6 +62,32 @@ def get_queue_ops(queue: str = "dense", *, ev_cap: int = 64,
     raise ValueError(f"unknown queue implementation {queue!r}")
 
 
+def gather_rows(eq, ids):
+    """Per-neuron queue rows of a compacted id list (the active-set gather
+    of the ``batch="compact"`` execution path).
+
+    Both queue implementations share the [N, cap] flat slot layout
+    (``WheelQueue`` docstring), so one gather serves either; ``ids`` must
+    be pre-clipped to [0, N).  Returns (t, w_ampa, w_gaba) rows — the
+    weights are read-only in the advance, only ``t`` is scattered back.
+    """
+    return eq.t[ids], eq.w_ampa[ids], eq.w_gaba[ids]
+
+
+def scatter_rows(eq, ids, t_rows):
+    """Write advanced delivery-time rows back; sentinel ids (>= N) drop.
+
+    The vardt advance consumes events by overwriting their times with
+    +inf and never touches the weight planes, so the scatter is a single
+    [cap, Q] row write — valid for dense queue and wheel alike.  ``ids``
+    must be unique in-range lanes (the compaction guarantees it): padding
+    is remapped to distinct out-of-range ids so the write can claim
+    ``unique_indices`` and skip XLA's duplicate-safe sequential scatter.
+    """
+    from repro.core import exec_common as xc
+    return eq._replace(t=xc.scatter_at(eq.t, ids, t_rows))
+
+
 def grouped_k(net):
     """Host-side check of ``make_network``'s static edge layout: edges
     grouped by postsynaptic neuron with uniform in-degree.  Returns the

@@ -161,3 +161,63 @@ def test_schur_preconditioner_matches_and_tightens(soma_model):
     assert dv < 0.5                        # same trajectory endpoint (mV)
     assert int(outs["schur"].nni) <= int(outs["neuron"].nni)
     assert int(outs["schur"].nncf) <= int(outs["neuron"].nncf)
+
+
+def test_error_fail_q_force_rebuilds_zn1(soma_model):
+    """Regression (ISSUE 4 satellite): when MAX_NEF error-test failures
+    force q -> 1, ``on_err_fail`` must rebuild zn[1] = h * f(t, zn[0]) as
+    CVODE does — before the fix the retry kept solving a corrupted BDF1
+    history and gave up (``failed=True``) on exactly this scenario."""
+    model = soma_model
+    opts = bdf.BDFOptions()
+    st = bdf.reinit(model, 0.0, model.init_state(-65.0), 0.1, opts)
+    for _ in range(8):
+        st = bdf.step(model, st, 2.0, 0.1, opts)
+    assert int(st.q) > 1 and not bool(st.failed)
+
+    # corrupt the Nordsieck history rows: every prediction is garbage, so
+    # the error test fails repeatedly until the q->1 force fires
+    st_bad = st._replace(zn=st.zn.at[1:].multiply(1e9))
+    st2 = bdf.step(model, st_bad, float(st.t) + 0.5, 0.1, opts)
+    assert int(st2.netf) >= bdf.MAX_NEF          # the force path ran
+    assert int(st2.q) == 1
+    assert not bool(st2.failed)
+
+    # ... and the recovered step is *accurate*: compare against the clean
+    # state advanced to the same time
+    ref = bdf.advance_to(model, st, float(st2.t) + 1e-12, 0.1, opts)
+    ref_v = float(bdf.interpolate(ref, st2.t)[model.idx_vsoma])
+    assert abs(float(st2.zn[0][model.idx_vsoma]) - ref_v) < 1e-6
+
+    # a subsequent normal advance from the recovered state stays healthy
+    st3 = bdf.advance_to(model, st2, float(st2.t) + 1.0, 0.1, opts)
+    assert not bool(st3.failed)
+    assert np.all(np.isfinite(np.asarray(st3.zn[0])))
+
+
+def test_step_or_deliver_matches_unfused_branches(soma_model):
+    """The fused deliver/step entry point must reproduce both unfused
+    branches: ``deliver_event`` on deliver lanes, ``step`` on step lanes
+    (to fp-fusion noise — the shared rhs stream reassociates rounding)."""
+    model = soma_model
+    opts = bdf.BDFOptions()
+    st = bdf.reinit(model, 0.0, model.init_state(-65.0), 0.15, opts)
+    for _ in range(5):
+        st = bdf.step(model, st, 5.0, 0.15, opts)
+
+    st_del = bdf.deliver_event(model, st, 1e-4, 2e-5, 0.15, opts)
+    st_fus = bdf.step_or_deliver(model, st, float(st.t), 1e-4, 2e-5,
+                                 jnp.asarray(True), 0.15, opts)
+    for f in ("t", "h", "q", "nst", "nfe", "nni", "nreset"):
+        assert np.allclose(np.asarray(getattr(st_del, f)),
+                           np.asarray(getattr(st_fus, f)), rtol=0, atol=0), f
+    np.testing.assert_allclose(np.asarray(st_del.zn), np.asarray(st_fus.zn),
+                               rtol=1e-12, atol=1e-15)
+
+    st_stp = bdf.step(model, st, 5.0, 0.15, opts)
+    st_fus2 = bdf.step_or_deliver(model, st, 5.0, 0.0, 0.0,
+                                  jnp.asarray(False), 0.15, opts)
+    for f in st._fields:
+        np.testing.assert_allclose(np.asarray(getattr(st_stp, f)),
+                                   np.asarray(getattr(st_fus2, f)),
+                                   rtol=1e-12, atol=1e-18, err_msg=f)

@@ -55,6 +55,12 @@ runs = {
     "sparse_wheel": dict(optimized=True, transport="sparse", queue="wheel",
                          exchange=ExchangeSpec(parcel_cap=8,
                                                compact_impl="jnp")),
+    # active-set compaction (ISSUE 4): shard-local compact -> step ->
+    # scatter composed with the sparse transport; full shard width
+    # (batch_cap=0) must be event-for-event identical to the dense batch
+    "sparse_compact": dict(optimized=True, transport="sparse",
+                           exchange=ExchangeSpec(parcel_cap=8),
+                           batch="compact"),
 }
 for name, kw in runs.items():
     res, rounds = run_fap_spmd(model, net, iinj, 6.0, mesh, max_rounds=60,
@@ -180,6 +186,18 @@ def test_sparse_matches_allgather(spmd_out):
         assert not spmd_out[name]["failed"]
         _assert_same_trains(spmd_out["allgather"]["trains"],
                             spmd_out[name]["trains"])
+
+
+def test_compact_batch_matches_dense(spmd_out):
+    """Acceptance (ISSUE 4): the shard-local active-set compaction
+    (batch="compact") composed with the sparse transport reproduces the
+    dense batch's event stream exactly, with nothing dropped."""
+    assert spmd_out["sparse_compact"]["dropped"] == 0
+    assert not spmd_out["sparse_compact"]["failed"]
+    _assert_same_trains(spmd_out["allgather"]["trains"],
+                        spmd_out["sparse_compact"]["trains"])
+    assert spmd_out["sparse_compact"]["rounds"] == \
+        spmd_out["sparse"]["rounds"]
 
 
 def test_parcel_overflow_detected_never_silent(spmd_out):

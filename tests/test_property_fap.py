@@ -78,6 +78,39 @@ def test_fanout_conservation(seed, n):
     assert int(np.asarray(valid).sum()) == int(out_deg[spiked].sum())
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(8, 48), st.integers(1, 12))
+def test_compact_selection_always_keeps_earliest_runnable(seed, n, cap):
+    """Progress guarantee of the active-set path (ISSUE 4): whatever the
+    clocks and the cap, the compacted batch contains a globally-earliest
+    runnable neuron — so with delays >= min_delay the conservative-
+    lookahead argument survives batch capping (overflow lanes only roll,
+    the frontier head never stalls)."""
+    from repro.core import exec_common as xcm
+
+    rng = np.random.default_rng(seed)
+    t_clock = jnp.asarray(np.round(rng.uniform(0.0, 5.0, n), 3))  # incl ties
+    runnable = jnp.asarray(rng.random(n) < 0.6)
+    if not bool(runnable.any()):
+        runnable = runnable.at[int(rng.integers(n))].set(True)
+    ids, cnt = xcm.compact_frontier(runnable, t_clock, cap)
+    ids = np.asarray(ids)
+    kept = ids[ids < n]
+    run_np = np.asarray(runnable)
+    clocks = np.asarray(t_clock)
+    # every kept lane is runnable, kept lanes are unique and index-sorted
+    assert run_np[kept].all()
+    assert len(np.unique(kept)) == len(kept)
+    # at least one lane is always kept, and the batch contains a globally
+    # earliest runnable neuron (min over kept == min over runnable) even
+    # under clock ties at the selection threshold (the force-include)
+    assert len(kept) >= 1
+    assert clocks[kept].min() == clocks[run_np].min()
+    # no overflow -> the batch is exactly the frontier
+    if int(run_np.sum()) <= cap:
+        assert set(kept.tolist()) == set(np.flatnonzero(run_np).tolist())
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.integers(0, 10_000))
 def test_delay_distribution_matches_paper(seed):
