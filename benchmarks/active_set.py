@@ -1,23 +1,38 @@
-"""Active-set compaction benchmark (ISSUE 4): per-round wall time of the
-FAP vardt scheduler round, dense vs compact batch, across the low/high
-firing regimes of Fig. 9 at N = 1k..64k (quick: 1k..4k).
+"""Active-set compaction benchmark (ISSUE 4) + activity-proportional
+delivery axis (ISSUE 5): per-round wall time of the FAP vardt scheduler
+round across the firing regimes of Fig. 9 at N = 1k..64k (quick: 1k..4k).
 
-The dense path vmaps the full step machinery over all N neurons every
-round, so its round time grows linearly in N whether 2% or 100% of the
-lanes do useful work; the compact path gathers a fixed [batch_cap] batch
-of the earliest runnable lanes and scatters results back, so at fixed cap
-its round time is ~flat in N (the residual O(N)/O(E) terms — horizon
-scatter-min, fan-out, queue insert — are cheap next to the BDF stepping).
+Stepping axis (ISSUE 4): the dense path vmaps the full step machinery
+over all N neurons every round, so its round time grows linearly in N
+whether 2% or 100% of the lanes do useful work; the compact path gathers
+a fixed [batch_cap] batch of the earliest runnable lanes and scatters
+results back, so at fixed cap its round time is ~flat in N.
+
+Delivery axis (ISSUE 5): on a spiking round the dense path pays the
+O(E) fan-out + insert no matter how few lanes spiked.
+``fanout="compact"`` gathers only the spiking lanes' out-edges (a fixed
+[spike_cap * k_out] batch through the flat batch insert) so the delivery
+stage, too, is ~flat in N.  The stage is timed standalone (a jitted
+fori_loop repeatedly inserting a fixed spike_cap-wide spiking set, carry
+in place — the same stage-isolation methodology as the PR 1 event-wheel
+insert bench): timing whole bursty rounds would bury the contrast under
+the BDF stepping cost and, worse, under the scheduler's warm-up
+transient, where thousands of early rounds are spike-free and the
+fan-out cond never fires.
 
 Asserted, not assumed:
-  * compact is event-for-event identical to dense on a full run, and a
-    forced batch_cap overflow rolls work to later rounds without drops
-    (deterministic — asserted in quick mode / per-PR CI too),
-  * per-round time at fixed batch_cap grows <= 1.5x from N=1k to N=16k
-    while dense grows >= 4x (CPU, low-activity regime).  The growth-ratio
-    bounds are timing-based and only enforced in the full (nightly) run;
-    quick mode asserts just the wide-margin compact-vs-dense speedup so a
-    contended CI runner cannot flake the per-PR gate.
+  * compact (batch AND fan-out) is event-for-event identical to dense on
+    a full run in every regime incl. burst, and a forced batch_cap
+    overflow rolls work to later rounds without drops (deterministic —
+    asserted in quick mode / per-PR CI too),
+  * quiet regime: per-round time at fixed batch_cap grows <= 1.5x from
+    N=1k to N=16k while dense grows >= 4x (CPU),
+  * delivery stage at a fixed 256-lane spiking set: compact fan-out
+    grows <= 2.5x from N=1k to N=16k while dense grows >= 4x.
+    Growth-ratio bounds are timing-based and only enforced in the full
+    (nightly) run; quick mode asserts just the wide-margin
+    compact-vs-dense speedups so a contended CI runner cannot flake the
+    per-PR gate.
 """
 from __future__ import annotations
 
@@ -58,6 +73,38 @@ def _round_timer(model, net, iinj, warm_rounds: int = 4, span: int = 6,
     return secs / span
 
 
+def _delivery_timer(net, fanout: str, spikers: int = BATCH_CAP,
+                    iters: int = 8, repeats: int = 3):
+    """Seconds per delivery stage (fan-out + queue insert of one spiking
+    round), timed inside a jitted fori_loop so the queue carry updates
+    in place — exactly as inside the production round.  The spiking set
+    is a fixed ``spikers``-wide mask (the batch cap bounds per-round
+    spikes on the compact path), times jittered per iteration so the
+    inserts cannot be CSE'd away."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import sched
+    from repro.core import exec_common as xc
+
+    n = int(net.n)
+    dnet = xc.to_device(net)
+    qops = sched.get_queue_ops("dense", ev_cap=64)
+    qinsert = sched.edge_insert(qops, net)
+    ins = xc.make_spike_insert(net, dnet, qops, qinsert, fanout,
+                               min(spikers, n))
+    rng = np.random.default_rng(1)
+    lanes = rng.choice(n, min(spikers, n), replace=False)
+    spiked = jnp.zeros((n,), bool).at[jnp.asarray(lanes)].set(True)
+    t_sp = jnp.asarray(rng.uniform(0.0, 0.5, n))
+    loop = jax.jit(lambda eq: jax.lax.fori_loop(
+        0, iters, lambda i, e: ins(e, spiked, t_sp + 1e-6 * i), eq))
+    eq0 = qops.make(n)
+    jax.block_until_ready(loop(eq0))                 # compile + warm
+    _, secs = timeit(lambda: loop(eq0), repeats=repeats)
+    return secs / iters
+
+
 def run() -> None:
     import jax
 
@@ -70,15 +117,17 @@ def run() -> None:
     lo_n, hi_n = sizes[0], (4096 if quick else 16384)
     compact_max, dense_min = 1.5, 4.0     # growth bounds, full mode only
 
-    # ---- event-for-event identity, low and high regimes ------------------
+    # ---- event-for-event identity, low/high/burst regimes (both compact
+    # knobs on: stepping batch AND delivery fan-out) -----------------------
     n_id = 256
     net_id = network.make_network(n_id, k_in=K_IN, seed=7)
-    for regime in ("quiet", "fast"):
+    for regime in ("quiet", "fast", "burst"):
         iinj = regime_iinj(n_id, regime, seed=1)
         r_d, rounds_d = exec_fap.make_fap_vardt_runner(
             model, net_id, iinj, T_END_IDENT)()
         r_c, rounds_c = exec_fap.make_fap_vardt_runner(
-            model, net_id, iinj, T_END_IDENT, batch="compact")()
+            model, net_id, iinj, T_END_IDENT, batch="compact",
+            fanout="compact")()
         same = (np.array_equal(np.asarray(r_d.rec.times),
                                np.asarray(r_c.rec.times))
                 and np.array_equal(np.asarray(r_d.rec.count),
@@ -131,6 +180,36 @@ def run() -> None:
             f"dense round time should grow ~linearly in N: {g_dense:.2f}x"
         assert g_compact <= compact_max, \
             f"compact round time should be ~flat in N: {g_compact:.2f}x"
+
+    # ---- delivery axis (ISSUE 5): spiking-round delivery stage -----------
+    # a fixed spike_cap-wide spiking set inserted repeatedly (carry in
+    # place); only the fan-out differs, so the contrast isolates the
+    # O(E)-per-spiking-round delivery cost the compact path removes
+    dtimes: dict = {}
+    for n in sizes:
+        net = network.make_network(n, k_in=K_IN, seed=7)
+        s_df = _delivery_timer(net, "dense")
+        s_cf = _delivery_timer(net, "compact")
+        dtimes[n] = (s_df, s_cf)
+        emit(f"active_set/dense_fanout_insert/n{n}", s_df * 1e6,
+             f"spikers={BATCH_CAP}")
+        emit(f"active_set/compact_fanout_insert/n{n}", s_cf * 1e6,
+             f"spikers={BATCH_CAP};speedup_vs_dense_fanout={s_df / s_cf:.2f}x")
+    gf_dense = dtimes[hi_n][0] / dtimes[lo_n][0]
+    gf_compact = dtimes[hi_n][1] / dtimes[lo_n][1]
+    f_speedup = dtimes[hi_n][0] / dtimes[hi_n][1]
+    emit("active_set/fanout_scaling", 0.0,
+         f"span=n{lo_n}->n{hi_n};dense_fanout_growth={gf_dense:.2f}x;"
+         f"compact_fanout_growth={gf_compact:.2f}x;"
+         f"delivery_speedup_at_n{hi_n}={f_speedup:.1f}x")
+    if quick:
+        assert f_speedup >= 1.5, \
+            f"compact fan-out should beat dense at n{hi_n}: {f_speedup:.2f}x"
+    else:
+        assert gf_dense >= 4.0, \
+            f"dense fan-out stage should grow ~linearly: {gf_dense:.2f}x"
+        assert gf_compact <= 2.5, \
+            f"compact fan-out stage should be ~flat: {gf_compact:.2f}x"
     dump_json("active_set")
 
 

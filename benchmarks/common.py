@@ -11,6 +11,7 @@ import functools
 import json
 import os
 import time
+import zlib
 
 import numpy as np
 
@@ -110,9 +111,16 @@ def calibration(model_kind: str = "soma") -> dict:
 
 def regime_iinj(n: int, regime: str, seed: int = 0,
                 model_kind: str = "soma") -> np.ndarray:
-    """Per-neuron currents whose population mean rate matches the regime."""
+    """Per-neuron currents whose population mean rate matches the regime.
+
+    The regime name is folded into the rng seed with a *deterministic*
+    hash (crc32): python's ``hash()`` is salted per process, which made
+    spike counts differ across processes for the same arguments —
+    cross-process benchmark comparisons (nightly BENCH json vs local
+    runs, orchestrator vs worker) silently compared different networks.
+    """
     cal = calibration(model_kind)
-    rng = np.random.default_rng(seed + hash(regime) % 1000)
+    rng = np.random.default_rng(seed + zlib.crc32(regime.encode()) % 1000)
     target = REGIMES[regime]
     if regime == "burst":
         base = np.full(n, cal["i_burst"])

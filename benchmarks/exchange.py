@@ -201,6 +201,63 @@ def _worker() -> None:
                 f"factor at n={n}: byte ratio {b_ratio:.2f} vs frontier "
                 f"ratio {f_ratio:.2f}")
 
+    # --- ragged transport axis (ISSUE 5): two-phase classed parcels -------
+    # per-class payloads measured from the lowered module (each class
+    # branch's sized all_to_all carries its own exchange_parcel_c<cap>
+    # scope): every class but the last must sit strictly below the static
+    # cap's bytes, and the last must equal them (ragged never ships more);
+    # then a driven quiet-regime run must realize strictly fewer parcel
+    # bytes than the static transport round-for-round.
+    from repro.distributed.fap_spmd import run_fap_spmd
+
+    from benchmarks.common import regime_iinj
+
+    n_r = sizes[0]
+    net_r = network.make_network(n_r, k_in=k_in, seed=0)
+    cap = parcel_cap_for(REGIME_RATES["high"], n_r // n_shards, k_in,
+                         n_shards)
+    xspec = ExchangeSpec(parcel_cap=cap)
+    spec = PaperNeuroSpec(n_neurons=n_r, k_in=k_in, ev_cap=16, t_end=100.0)
+    fn, args, sh = build_fap_round(model, spec, mesh, optimized=True,
+                                   transport="sparse_ragged", exchange=xspec,
+                                   net=net_r)
+    txt = jax.jit(fn, in_shardings=sh).lower(*args).compile().as_text()
+    from repro.distributed.exchange import class_tag
+    ladder = xspec.class_ladder()
+    by_class = collective_channel_bytes(
+        txt, tags=tuple(class_tag(c) for c in ladder))
+    per_class = [by_class[class_tag(c)] for c in ladder]
+    static = parcel[("sparse", "high", n_r)]
+    emit(f"exchange/bytes/ragged_classes/n{n_r}", 0.0,
+         f"ladder={list(ladder)};per_class={per_class};static={static}")
+    if not (per_class == sorted(per_class) and per_class[-1] == static
+            and all(b < static for b in per_class[:-1]) and per_class[0] > 0):
+        raise AssertionError(
+            f"ragged class ladder bytes malformed: {per_class} vs static "
+            f"{static}")
+    # driven quiet run: the counts phase must route ~every round through
+    # the smallest class
+    iinj_q = regime_iinj(n_r, "quiet", seed=1)
+    kw = dict(mesh=mesh, optimized=True, exchange=xspec, max_rounds=8,
+              ev_cap=16)
+    res_s, r_s = run_fap_spmd(model, net_r, iinj_q, 4.0, transport="sparse",
+                              **kw)
+    res_g, r_g = run_fap_spmd(model, net_r, iinj_q, 4.0,
+                              transport="sparse_ragged", **kw)
+    sb = res_s.comm["parcel_bytes"]
+    rb = res_g.comm["parcel_bytes"]
+    emit("exchange/ragged/realized_quiet", 0.0,
+         f"ragged={rb};static={sb};rounds={r_g};"
+         f"tightening={sb / max(1, rb):.2f}x")
+    if not (r_s == r_g and 0 < rb < sb):
+        raise AssertionError(
+            f"ragged transport did not tighten quiet-run parcel bytes: "
+            f"{rb} vs static {sb} ({r_g}/{r_s} rounds)")
+    if rb > r_g * per_class[-1]:
+        raise AssertionError(
+            f"ragged realized bytes exceed the static cap: {rb} > "
+            f"{r_g * per_class[-1]}")
+
 
 if __name__ == "__main__":
     if "--worker" in sys.argv:

@@ -8,6 +8,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# benchmark spike counts must be reproducible across processes: the regime
+# hash is deterministic (crc32) since ISSUE 5, and pinning the interpreter
+# hash seed removes any remaining hash-order effects in subprocess workers
+export PYTHONHASHSEED=0
 
 echo "== tier-1 tests =="
 python -m pytest -x -q "$@"
@@ -16,6 +20,9 @@ echo "== event-wheel bench smoke (REPRO_BENCH_QUICK=1) =="
 REPRO_BENCH_QUICK=1 python -c "from benchmarks import event_wheel; event_wheel.run()"
 
 echo "== sparse-exchange bench smoke (4-device host platform) =="
+# includes the ragged-transport axis: per-class parcel bytes from the
+# lowered HLO + a driven quiet run realizing fewer bytes than the static
+# cap (never more)
 REPRO_BENCH_QUICK=1 python -c "from benchmarks import exchange; exchange.run()"
 
 echo "== locality placement smoke (block topology, 4-device host mesh) =="
@@ -25,9 +32,10 @@ echo "== locality placement smoke (block topology, 4-device host mesh) =="
 REPRO_BENCH_QUICK=1 python -c "from benchmarks import placement; placement.run()"
 
 echo "== active-set compaction smoke (compact == dense + flat round time) =="
-# asserts the compact batch path is event-for-event identical to dense and
-# that its per-round wall time stays ~flat in N at fixed batch_cap while
-# the dense path grows linearly — active-set regressions fail here
+# asserts the compact batch path is event-for-event identical to dense
+# (incl. the burst regime with compact fan-out) and that per-round wall
+# time stays ~flat in N at fixed caps on both the stepping and the
+# delivery axis while the dense paths grow linearly
 REPRO_BENCH_QUICK=1 python -c "from benchmarks import active_set; active_set.run()"
 
 echo "check.sh: all green"

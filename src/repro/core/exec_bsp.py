@@ -41,17 +41,23 @@ class RunResult(NamedTuple):
     y_final: jnp.ndarray       # [N, n_state] (vardt: zn[0])
     sched: object = None       # xc.SchedStats active-set telemetry (vardt
                                # runners; None where not collected)
+    comm: object = None        # transport telemetry dict (run_fap_spmd:
+                               # realized parcel bytes / class counts;
+                               # None on single-host runners)
 
 
 def make_bsp_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
                           method: str = "cnexp", dt: float = 0.025,
                           window: float = 0.1, ev_cap: int = EV_CAP,
                           queue: str = "dense",
-                          wheel: sched.WheelSpec = sched.WheelSpec()):
+                          wheel: sched.WheelSpec = sched.WheelSpec(),
+                          fanout: str = "dense", spike_cap: int = 0):
     n = net.n
     dnet = xc.to_device(net)
     qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
     qinsert = sched.edge_insert(qops, net)
+    spike_ins = xc.make_spike_insert(net, dnet, qops, qinsert, fanout,
+                                     spike_cap)
     steps_w = max(1, int(round(window / dt)))
     n_windows = int(math.ceil(t_end / (steps_w * dt)))
     step = make_stepper(model, method, dt)
@@ -80,8 +86,7 @@ def make_bsp_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
         # collective exchange at the window barrier (<=1 spike per 0.1 ms)
         spiked_w = spk.any(axis=0)
         t_spike_w = jnp.where(spk, tsp, 0.0).sum(axis=0)
-        tgt, t_ev, wa, wg, valid = xc.fanout(dnet, spiked_w, t_spike_w)
-        eq = qinsert(eq, tgt, t_ev, wa, wg, valid)
+        eq = spike_ins(eq, spiked_w, t_spike_w)
         return (Y, eq, rec, n_ev), None
 
     @jax.jit
@@ -170,7 +175,8 @@ def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                           queue: str = "dense",
                           wheel: sched.WheelSpec = sched.WheelSpec(),
                           batch: str = "dense", batch_cap: int = 0,
-                          n_bisect: int = 48):
+                          n_bisect: int = 48, fanout: str = "dense",
+                          spike_cap: int = 0):
     """Method 2b: CVODE under BSP — barrier at every communication window.
 
     batch: "dense" vmaps the vardt advance over all N neurons per window;
@@ -181,6 +187,11 @@ def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
     compact spike trains are event-for-event identical to dense at ANY
     cap (chunks, unlike the FAP round's roll-over, never change a lane's
     horizon).  batch_cap <= 0 means N.
+
+    fanout: "dense" | "compact" — the spike-delivery twin of ``batch``
+    (``exec_common.make_spike_insert``): "compact" gathers only the
+    spiking lanes' out-edges per window; spike_cap overflow falls back to
+    the dense branch, never drops.  spike_cap <= 0 means min(N, 256).
     """
     if batch not in ("dense", "compact"):
         raise ValueError(f"unknown batch mode {batch!r}")
@@ -189,6 +200,8 @@ def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
     dnet = xc.to_device(net)
     qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
     qinsert = sched.edge_insert(qops, net)
+    spike_ins = xc.make_spike_insert(net, dnet, qops, qinsert, fanout,
+                                     spike_cap)
     n_windows = int(math.ceil(t_end / window))
     iinj = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
     advance = make_vardt_advance(model, opts, eg_window, step_budget)
@@ -248,8 +261,7 @@ def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                                   stats.lanes + n,
                                   stats.rounds + 1)
         rec = ev.record_spikes(rec, neuron_ids, t_sp, spiked)
-        tgt, t_ev, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
-        eq = qinsert(eq, tgt, t_ev, wa, wg, valid)
+        eq = spike_ins(eq, spiked, t_sp)
         return (sts, eq, rec, n_ev + nd, n_rs + nrs, stats), None
 
     @jax.jit

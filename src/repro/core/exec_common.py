@@ -45,7 +45,7 @@ def detect_spikes(v_prev, v_new, t_prev, t_new):
     return crossed, jnp.where(crossed, t_spike, 0.0)
 
 
-def fanout(dnet: DeviceNet, spiked, t_spike):
+def fanout_edges(dnet: DeviceNet, spiked, t_spike):
     """Edge-parallel synaptic fan-out of one spike per neuron.
 
     Returns candidate events (target, t_ev, w_ampa, w_gaba, valid), length E.
@@ -53,6 +53,9 @@ def fanout(dnet: DeviceNet, spiked, t_spike):
     valid = spiked[dnet.pre]
     t_ev = t_spike[dnet.pre] + dnet.delay
     return dnet.post, t_ev, dnet.w_ampa, dnet.w_gaba, valid
+
+
+fanout = fanout_edges     # historical name (shadowed by the knob in factories)
 
 
 def horizon_times(dnet: DeviceNet, n: int, t_clock, t_end, *,
@@ -141,6 +144,28 @@ def select_active(runnable, t_clock, cap: int, n_iters: int = 48):
     return jnp.logical_and(runnable, score <= tau)
 
 
+def out_tables(net):
+    """Host-side by-pre grouping of the static edge list: per neuron i the
+    postsynaptic targets (sentinel N) and edge-list positions (sentinel E)
+    of its out-edges, padded to the max out-degree.  Builders that need
+    both tables (incremental horizon + compact fan-out) call this once —
+    the O(E log E) grouping is the expensive part, not the two views."""
+    pre = np.asarray(net.pre)
+    post = np.asarray(net.post)
+    n, E = int(net.n), int(pre.shape[0])
+    deg = np.bincount(pre, minlength=n)
+    mo = int(deg.max()) if E else 1
+    order = np.argsort(pre, kind="stable")
+    starts = np.zeros(n + 1, np.int64)
+    starts[1:] = np.cumsum(deg)
+    rank_in_pre = np.arange(E) - starts[pre[order]]
+    post_t = np.full((n, mo), n, np.int32)
+    post_t[pre[order], rank_in_pre] = post[order]
+    edge_t = np.full((n, mo), E, np.int32)
+    edge_t[pre[order], rank_in_pre] = order
+    return post_t, edge_t
+
+
 def out_post_table(net) -> np.ndarray:
     """Host-side static out-neighbour table: row i lists the postsynaptic
     targets of neuron i's out-edges, padded with the sentinel N.
@@ -151,18 +176,89 @@ def out_post_table(net) -> np.ndarray:
     clock-cap terms) — O(cap * max_out_degree) per round instead of the
     O(E) full scatter-min.
     """
-    pre = np.asarray(net.pre)
-    post = np.asarray(net.post)
-    n, E = int(net.n), int(pre.shape[0])
-    deg = np.bincount(pre, minlength=n)
-    mo = int(deg.max()) if E else 1
-    order = np.argsort(pre, kind="stable")
-    starts = np.zeros(n + 1, np.int64)
-    starts[1:] = np.cumsum(deg)
-    rank_in_pre = np.arange(E) - starts[pre[order]]
-    table = np.full((n, mo), n, np.int32)
-    table[pre[order], rank_in_pre] = post[order]
-    return table
+    return out_tables(net)[0]
+
+
+def out_edge_table(net) -> np.ndarray:
+    """Host-side static out-*edge* table: row i lists the edge-list
+    positions of neuron i's out-edges, padded with the sentinel E.
+
+    The compact fan-out path (``fanout="compact"``) gathers these rows for
+    the <= spike_cap spiking lanes and inserts only that
+    [spike_cap, max_out_degree] edge batch — O(spikes * k_out) per
+    spiking round instead of the O(E) full fan-out.
+    """
+    return out_tables(net)[1]
+
+
+def make_spike_insert(net, dnet: DeviceNet, qops, qinsert,
+                      fanout: str = "dense", spike_cap: int = 256,
+                      edge_table=None):
+    """The fan-out + insert stage of every execution model, behind the
+    ``fanout="dense"|"compact"`` knob.  Returns ``fn(eq, spiked[N],
+    t_spike[N]) -> eq`` (at most one spike per neuron per call, the
+    invariant all runners already hold).
+
+    ``dense``   — the reference path: edge-parallel ``fanout`` over all E
+                  edges + the net's best insert (``sched.edge_insert``).
+    ``compact`` — activity-proportional delivery: when at most
+                  ``spike_cap`` lanes spiked, compact the mask and gather
+                  only those lanes' out-edges (``out_edge_table`` rows via
+                  the ``compact_gather`` kernel), then insert the fixed
+                  [spike_cap * k_out] batch through the queue's flat
+                  batch insert.  More spikes than ``spike_cap`` fall back
+                  to the dense branch under ``lax.cond`` — identical
+                  event set either way (overflow *falls back*, never
+                  drops).  Spike-free rounds insert nothing on either
+                  branch, so callers may still guard with their own cond.
+    """
+    if fanout not in ("dense", "compact"):
+        raise ValueError(f"unknown fanout mode {fanout!r}")
+
+    def dense_ins(eq, spiked, t_sp):
+        tgt, t_ev, wa, wg, valid = fanout_edges(dnet, spiked, t_sp)
+        return qinsert(eq, tgt, t_ev, wa, wg, valid)
+
+    if fanout == "dense":
+        return dense_ins
+
+    from repro.kernels.event_wheel import ops as ew_ops
+    n, E = int(net.n), int(dnet.pre.shape[0])
+    cap = min(int(spike_cap), n) if spike_cap > 0 else min(n, 256)
+    # [N, MO], sentinel E (edge_table lets builders that also need the
+    # out-post table share one out_tables() grouping pass)
+    edge_tbl = jnp.asarray(out_edge_table(net) if edge_table is None
+                           else edge_table)
+
+    def compact_ins(eq, spiked, t_sp):
+        ids, eids, _ = ew_ops.compact_gather(spiked, edge_tbl, cap, fill=E)
+        idc = jnp.minimum(ids, n - 1)
+        ok = jnp.logical_and((ids < n)[:, None], eids < E)  # [cap, MO]
+        eidc = jnp.minimum(eids, E - 1)
+        tgt = dnet.post[eidc]
+        t_ev = t_sp[idc][:, None] + dnet.delay[eidc]
+        return qops.insert_batch(eq, tgt.ravel(), t_ev.ravel(),
+                                 dnet.w_ampa[eidc].ravel(),
+                                 dnet.w_gaba[eidc].ravel(), ok.ravel())
+
+    def ins(eq, spiked, t_sp):
+        return jax.lax.cond(spiked.sum() <= cap, compact_ins, dense_ins,
+                            eq, spiked, t_sp)
+
+    return ins
+
+
+def auto_batch_cap(stats: SchedStats, n: int, *, slack: float = 2.0,
+                   floor: int = 32) -> int:
+    """Pick a ``batch_cap`` from measured frontier occupancy
+    (``RunResult.sched`` telemetry of a probe run): the mean per-round
+    runnable frontier times ``slack`` headroom, rounded up to a power of
+    two, clipped to [floor, n].  Zero-round telemetry returns ``floor``.
+    """
+    rounds = max(1, int(stats.rounds))
+    mean_frontier = float(stats.runnable) / rounds
+    want = max(float(floor), slack * mean_frontier)
+    return min(n, 1 << max(0, int(np.ceil(np.log2(want)))))
 
 
 def compact_frontier(runnable, t_clock, cap: int, n_iters: int = 48):

@@ -45,12 +45,15 @@ def make_fap_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
                           method: str = "cnexp", dt: float = 0.025,
                           round_cap_steps: int = 16, ev_cap: int = EV_CAP,
                           max_rounds: int = 2_000_000, queue: str = "dense",
-                          wheel: sched.WheelSpec = sched.WheelSpec()):
+                          wheel: sched.WheelSpec = sched.WheelSpec(),
+                          fanout: str = "dense", spike_cap: int = 0):
     """Fixed-step FAP (method 1c).  Returns a nullary jitted runner."""
     n = net.n
     dnet = xc.to_device(net)
     qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
     qinsert = sched.edge_insert(qops, net)
+    spike_ins = xc.make_spike_insert(net, dnet, qops, qinsert, fanout,
+                                     spike_cap)
     step = make_stepper(model, method, dt)
     vstep = jax.vmap(step)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
@@ -87,8 +90,7 @@ def make_fap_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
         Y, k, eq, rec, n_ev, n_st, spiked_r, t_sp_r = jax.lax.fori_loop(
             0, round_cap_steps, inner,
             (Y, k, eq, rec, n_ev, n_st, spiked_r, t_sp_r))
-        tgt, t_evs, wa, wg, valid = xc.fanout(dnet, spiked_r, t_sp_r)
-        eq = qinsert(eq, tgt, t_evs, wa, wg, valid)
+        eq = spike_ins(eq, spiked_r, t_sp_r)
         return Y, k, eq, rec, n_ev, n_st, rounds + 1
 
     def cond(carry):
@@ -118,7 +120,8 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                           wheel: sched.WheelSpec = sched.WheelSpec(),
                           select: str = "sort", horizon_impl: str = "scatter",
                           n_bisect: int = 48, batch: str = "dense",
-                          batch_cap: int = 0):
+                          batch_cap=0, fanout: str = "dense",
+                          spike_cap: int = 0, probe_t: float = 5.0):
     """Variable-step FAP (method 2c, the paper's reference method).
 
     eg_window: 0 -> precise delivery (2c-);  dt/2 or dt -> grouped variants.
@@ -142,7 +145,12 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                   (``select_threshold`` bisection; the globally earliest
                   neuron is always included, preserving the conservative-
                   lookahead progress argument) and overflowed neurons
-                  roll to the next round.  batch_cap <= 0 means N.
+                  roll to the next round.  batch_cap <= 0 means N;
+                  batch_cap="auto" runs a short dense probe
+                  (min(t_end, probe_t) ms) and picks the cap from the
+                  measured frontier occupancy
+                  (``exec_common.auto_batch_cap``; the chosen value is
+                  exposed as ``run.batch_cap``) — one extra compile.
                   Two further compact-only structural savings keep the
                   round ~flat in N at fixed cap: the O(E) fan-out/insert
                   runs under a ``lax.cond`` (a semantic no-op on
@@ -152,6 +160,16 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                   only rows whose pre clocks moved (the batch's
                   out-neighbours) are recomputed, bit-identical to the
                   full scatter-min because min is exact in fp.
+    fanout:       "dense" fans every spike over all E edges; "compact"
+                  gathers only the <= spike_cap spiking lanes' out-edges
+                  (static ``out_edge_table`` rows via the
+                  ``compact_gather`` kernel) and inserts that fixed
+                  [spike_cap * k_out] batch — bursty regimes stop paying
+                  O(E) per spiking round.  More spikes than spike_cap
+                  fall back to the dense branch (identical events,
+                  never a drop).  spike_cap <= 0 defaults to the batch
+                  cap under batch="compact" (stepped lanes bound spikes,
+                  so the fallback never fires) and min(N, 256) otherwise.
 
     The returned nullary runner also exposes ``run.init_carry`` /
     ``run.round_body`` / ``run.cond`` so benchmarks can drive and time
@@ -160,7 +178,17 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
     n = net.n
     if batch not in ("dense", "compact"):
         raise ValueError(f"unknown batch mode {batch!r}")
+    if batch_cap == "auto":
+        probe = make_fap_vardt_runner(
+            model, net, iinj, min(t_end, probe_t), opts=opts,
+            eg_window=eg_window, horizon_cap=horizon_cap,
+            k_select=k_select, step_budget=step_budget, ev_cap=ev_cap,
+            max_rounds=max_rounds, queue=queue, wheel=wheel, select=select,
+            horizon_impl=horizon_impl, n_bisect=n_bisect)
+        batch_cap = xc.auto_batch_cap(probe()[0].sched, n)
     cap = n if batch_cap <= 0 else min(int(batch_cap), n)
+    s_cap = spike_cap if spike_cap > 0 else \
+        (cap if batch == "compact" else min(n, 256))
     dnet = xc.to_device(net)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
     neuron_ids = jnp.arange(n, dtype=jnp.int32)     # hoisted round constant
@@ -177,9 +205,13 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
     # incremental horizon maintenance: compact + scatter impl + grouped net
     incremental = (batch == "compact" and horizon_impl == "scatter"
                    and sched.grouped_k(net) is not None)
+    edge_tbl = None
     if incremental:
         pre_byk, delay_byk = ew_ops.by_post_layout(net)
-        out_post = jnp.asarray(xc.out_post_table(net))      # [N, MO], sent. n
+        post_np, edge_np = xc.out_tables(net)    # one grouping pass serves
+        out_post = jnp.asarray(post_np)          # the horizon ([N,MO], sent.
+        if fanout == "compact":                  # n) and the fan-out tables
+            edge_tbl = edge_np
 
     def _horizon_rows(t_clock, p):
         """Recompute horizon for the (sentinel-padded) post set ``p`` from
@@ -190,11 +222,13 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
         hor_p = jnp.minimum(jnp.min(cand, axis=0), t_end)
         return jnp.minimum(hor_p, t_clock[pc] + horizon_cap)
 
+    spike_ins = xc.make_spike_insert(net, dnet, qops, qinsert, fanout, s_cap,
+                                     edge_table=edge_tbl)
+
     def _insert_spikes(eq, spiked_b, tsp_b, ids):
         spiked = xc.scatter_at(jnp.zeros((n,), bool), ids, spiked_b)
         t_sp = xc.scatter_at(jnp.zeros((n,)), ids, tsp_b)
-        tgt, t_evs, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
-        return qinsert(eq, tgt, t_evs, wa, wg, valid)
+        return spike_ins(eq, spiked, t_sp)
 
     def round_body(carry):
         if incremental:
@@ -263,8 +297,7 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                 sts, eq.t, eq.w_ampa, eq.w_gaba, horizon, runnable, iinj_v)
             eq = eq._replace(t=eq_t)
             rec = ev.record_spikes(rec, neuron_ids, t_sp, spiked)
-            tgt, t_evs, wa, wg, valid = xc.fanout(dnet, spiked, t_sp)
-            eq = qinsert(eq, tgt, t_evs, wa, wg, valid)
+            eq = spike_ins(eq, spiked, t_sp)
             stats = xc.SchedStats(stats.runnable + n_runnable,
                                   stats.stepped + n_runnable,
                                   stats.lanes + n,
@@ -310,6 +343,8 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
     run.init_carry = init_carry
     run.round_body = round_body
     run.cond = cond
+    run.batch_cap = cap
+    run.spike_cap = s_cap
     return run
 
 

@@ -54,11 +54,14 @@ def make_spec_runner(model: CellModel, net: Network, iinj, t_end: float,
                      horizon_cap: float = 2.0, spec_window: float = 2.0,
                      step_budget: int = 12, ev_cap: int = EV_CAP,
                      max_rounds: int = 1_000_000, queue: str = "dense",
-                     wheel: sched.WheelSpec = sched.WheelSpec()):
+                     wheel: sched.WheelSpec = sched.WheelSpec(),
+                     fanout: str = "dense", spike_cap: int = 0):
     n = net.n
     dnet = xc.to_device(net)
     qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
     qinsert = sched.edge_insert(qops, net)
+    spike_ins = xc.make_spike_insert(net, dnet, qops, qinsert, fanout,
+                                     spike_cap)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
     neuron_ids = jnp.arange(n, dtype=jnp.int32)     # hoisted round constant
     advance = make_vardt_advance(model, opts, 0.0, step_budget)
@@ -100,8 +103,7 @@ def make_spec_runner(model: CellModel, net: Network, iinj, t_end: float,
         all_spiked = jnp.logical_or(spiked, emit_held)
         all_tsp = jnp.where(emit_held, held_t, t_sp)
         rec = ev.record_spikes(rec, neuron_ids, all_tsp, all_spiked)
-        tgt, t_evs, wa, wg, validm = xc.fanout(dnet, all_spiked, all_tsp)
-        eq = qinsert(eq, tgt, t_evs, wa, wg, validm)
+        eq = spike_ins(eq, all_spiked, all_tsp)
 
         # ---- speculative phase (hold spikes; nothing leaves the neuron) ---
         snap = sts

@@ -57,7 +57,8 @@ from repro.core import bdf
 from repro.core import exec_common as xc
 from repro.core.cell import CellModel
 from repro.core.exec_bsp import make_vardt_advance
-from repro.distributed.exchange import ExchangeSpec, get_transport
+from repro.distributed.exchange import (ExchangeSpec, get_transport,
+                                        shard_index)
 
 
 class PaperNeuroSpec(NamedTuple):
@@ -75,7 +76,9 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
                     wheel: sched.WheelSpec = sched.WheelSpec(),
                     transport: str = "allgather",
                     exchange: ExchangeSpec = ExchangeSpec(), net=None,
-                    batch: str = "dense", batch_cap: int = 0):
+                    batch: str = "dense", batch_cap: int = 0,
+                    fanout: str = "dense", spike_cap: int = 0,
+                    horizon: str = "full", move_cap: int = 0):
     """optimized=False: paper-faithful baseline — horizon scatter-min and
     event insert as *global* ops, lowered by GSPMD (collective-heavy: with
     queue="dense" the global argsort in the insert becomes a distributed
@@ -100,9 +103,34 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
     only: with ``optimized=False`` there is no shard-local stage to
     compact and the knob is rejected.
 
+    fanout="compact" compacts each round's (global) spiking set and
+    gathers only those neurons' out-edges from the replicated static
+    ``exec_common.out_edge_table``; each shard keeps the rows that land in
+    its contiguous global-edge-id slice and inserts that fixed
+    [spike_cap * k_out] batch instead of scanning all E/n_shards local
+    in-edges — the delivery-side twin of ``batch="compact"``.  More than
+    ``spike_cap`` global spikes fall back to the dense insert under
+    ``lax.cond`` (identical events, never a drop).  spike_cap <= 0 means
+    min(N, 256).
+
+    horizon="incremental" extends PR 4's incremental horizon maintenance
+    to the shard-local round: the moved set is (a) last round's advanced
+    batch (carried compact ids) and (b) the *notify frontier* entries
+    whose gathered clock changed this round (compared against the carried
+    previous boundary-clock vector — ``sharding.shard_frontier`` tables),
+    and only rows fed by a moved clock recompute, bit-identical to the
+    full scatter-min because min is exact.  Requires optimized +
+    batch="compact" + a sparse-family transport (the frontier tables).
+    The round then carries (horizon, prev_boundary_clocks, moved_ids)
+    through its inputs/outputs; ``run_fap_spmd`` seeds them.
+
     The round returns (sts, eq_t, eq_a, eq_g, spiked, t_spike, n_deliv,
-    n_resets, dropped); ``dropped`` counts this round's queue overflow plus
-    sparse-transport parcel overflow (detected, never silent).
+    n_resets, dropped, parcel_bytes[, horizon, prev_bnd, moved_ids]);
+    ``dropped`` counts this round's queue overflow plus sparse-transport
+    parcel overflow (detected, never silent); ``parcel_bytes`` is the
+    transport's realized parcel-channel payload this round (the ragged
+    transport's per-round class choice made visible — cross-checked
+    against the per-class HLO attribution in tests).
     """
     from functools import partial
 
@@ -118,6 +146,23 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
         raise ValueError("active-set compaction is shard-local "
                          "(optimized=True); the global path has no "
                          "shard-local advance stage to compact")
+    if fanout not in ("dense", "compact"):
+        raise ValueError(f"unknown fanout mode {fanout!r}")
+    if fanout == "compact" and (not optimized or net is None):
+        raise ValueError("compact fan-out is shard-local (optimized=True) "
+                         "and derives its out-edge table from the concrete "
+                         "edge list: pass net=")
+    if horizon not in ("full", "incremental"):
+        raise ValueError(f"unknown horizon mode {horizon!r}")
+    incremental = horizon == "incremental"
+    if incremental and (not optimized or batch != "compact"
+                        or not transport.startswith("sparse")
+                        or net is None):
+        raise ValueError("incremental horizon maintenance needs the "
+                         "shard-local round (optimized=True), the compact "
+                         "batch's moved set (batch='compact') and the "
+                         "sparse transport's frontier tables "
+                         "(transport='sparse'|'sparse_ragged', net=)")
     n, E = spec.n_neurons, spec.n_neurons * spec.k_in
     flat = tuple(mesh.axis_names)                  # shard over ALL axes
     nshard = P(flat)
@@ -125,11 +170,28 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
     vadvance = jax.vmap(advance)
     n_shards = int(np.prod([mesh.shape[a] for a in flat]))
     n_local = n // n_shards
+    e_local = E // n_shards
     cap = n_local if batch_cap <= 0 else min(int(batch_cap), n_local)
+    s_cap = min(int(spike_cap), n) if spike_cap > 0 else min(n, 256)
     qops = sched.get_queue_ops(queue, ev_cap=spec.ev_cap, wheel=wheel)
     qcap = qops.capacity
     tp = get_transport(transport, mesh, n=n, net=net, spec=exchange) \
         if optimized else None
+    n_targs = len(tp.example_args) if tp is not None else 0
+    # replicated static tables (appended to the round args after targs);
+    # one host-side grouping pass serves both views
+    tbl_args, tbl_specs = (), ()
+    if fanout == "compact" or incremental:
+        post_np, edge_np = xc.out_tables(net)
+    if fanout == "compact":
+        tbl_args += (jnp.asarray(edge_np),)                # [N, MO], sent. E
+        tbl_specs += (P(None, None),)
+    if incremental:
+        tbl_args += (jnp.asarray(post_np),)                # [N, MOp], sent. N
+        tbl_specs += (P(None, None),)
+        sf_len = int(np.prod(tp.example_args[1].shape))    # n_shards * F
+        mcap = min(sf_len, n_shards * cap) if move_cap <= 0 \
+            else min(int(move_cap), sf_len)
 
     def _insert_byk(eq_t, eq_a, eq_g, t_ev, wa, wg, valid):
         """Grouped insert over the by-post edge layout (k_in per neuron);
@@ -143,20 +205,71 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
         return eq
 
     def _round_local(sts, eq_t, eq_a, eq_g, pre_l, delay_l, wa_l, wg_l, iinj,
-                     *targs):
+                     *rest):
         """One scheduler round on this shard's neurons.  All arrays are
-        shard-local; the ONLY communication is the transport's two channels
-        (plus the scalar telemetry psums)."""
+        shard-local (the static tables replicated); the ONLY communication
+        is the transport's channels (plus the scalar telemetry psums)."""
+        from repro.kernels.event_wheel import ops as ew_ops
+
+        n_carry = 3 if incremental else 0
+        carry, rest = rest[:n_carry], rest[n_carry:]
+        targs, tbls = rest[:n_targs], rest[n_targs:]
         t_local = sts.t
         n_loc = t_local.shape[0]
+        sidx = shard_index(mesh, flat)
+        offset = sidx * n_local
         # --- notify: clock exchange (stepping notifications) --------------
-        t_table = tp.notify(t_local, *targs)
+        t_table, bnd_new = tp.notify(t_local, *targs)
         # --- horizon + runnable (shared helper, shard-relative post) ------
         post_rel = jnp.repeat(jnp.arange(n_loc), spec.k_in)
         dloc = xc.DeviceNet(pre_l, post_rel, delay_l, wa_l, wg_l)
-        horizon = xc.horizon_times(dloc, n_loc, t_local, spec.t_end,
-                                   t_table=t_table,
-                                   horizon_cap=spec.horizon_cap)
+
+        def _full_horizon(_):
+            return xc.horizon_times(dloc, n_loc, t_local, spec.t_end,
+                                    t_table=t_table,
+                                    horizon_cap=spec.horizon_cap)
+
+        if incremental:
+            hor_c, prev_bnd, moved_prev = carry
+            post_tbl_r = tbls[-1]
+            b_gid_flat = targs[1].reshape(-1)              # [n_shards * F]
+            sf = b_gid_flat.shape[0]
+            pre_byk = pre_l.reshape(n_loc, spec.k_in).T    # [K, n_loc]
+            delay_byk = delay_l.reshape(n_loc, spec.k_in).T
+
+            def _rows(p):
+                """Recompute horizon rows ``p`` (sentinel-padded) from the
+                fresh notify table — the same min/clamp chain as the full
+                scatter-min (min is exact: incremental == full, bitwise)."""
+                pc = jnp.minimum(p, n_loc - 1)
+                cand = t_table[pre_byk[:, pc]] + delay_byk[:, pc]
+                h = jnp.minimum(jnp.min(cand, axis=0), spec.t_end)
+                return jnp.minimum(h, t_local[pc] + spec.horizon_cap)
+
+            # moved set: frontier clocks that changed since last round
+            # (pad slots carry the gid sentinel n -> masked out) plus last
+            # round's locally advanced lanes (carried compact ids)
+            moved_b = jnp.logical_and(bnd_new != prev_bnd, b_gid_flat < n)
+            mids, mcnt = ew_ops.compact_ids(moved_b, mcap)
+            gids = jnp.where(mids < sf,
+                             b_gid_flat[jnp.minimum(mids, sf - 1)], n)
+
+            def _incr_horizon(hor):
+                own = jnp.where(moved_prev < n_loc, moved_prev + offset, n)
+                srcs = jnp.concatenate([gids, own])
+                posts = jnp.where((srcs < n)[:, None],
+                                  post_tbl_r[jnp.minimum(srcs, n - 1)], n)
+                p_loc = posts - offset
+                p_loc = jnp.where(
+                    jnp.logical_and(p_loc >= 0, p_loc < n_loc), p_loc, n_loc)
+                p = jnp.concatenate([moved_prev, p_loc.reshape(-1)])
+                return hor.at[p].set(_rows(p), mode="drop")
+
+            horizon = jax.lax.cond(mcnt <= mcap, _incr_horizon,
+                                   _full_horizon, hor_c)
+            prev_bnd = bnd_new
+        else:
+            horizon = _full_horizon(None)
         runnable = xc.runnable_mask(t_local, horizon)
         # --- advance (dense: all lanes; compact: the shard-local active
         # set, gathered into a fixed [cap] batch and scattered back) -------
@@ -165,6 +278,7 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
             lane_ok = ids < n_loc
             idc = jnp.minimum(ids, n_loc - 1)
             sts_b = xc.gather_lanes(sts, idc)
+            t_b_prev = sts_b.t
             sts_b, eqt_b, spiked_b, tsp_b, nd, nrs = vadvance(
                 sts_b, eq_t[idc], eq_a[idc], eq_g[idc], horizon[idc],
                 lane_ok, iinj[idc])
@@ -172,23 +286,63 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
             eq_t = xc.scatter_at(eq_t, ids, eqt_b)
             spiked = xc.scatter_at(jnp.zeros((n_loc,), bool), ids, spiked_b)
             t_sp = xc.scatter_at(jnp.zeros((n_loc,)), ids, tsp_b)
+            if incremental:
+                moved = jnp.logical_and(lane_ok, sts_b.t != t_b_prev)
+                moved_prev = jnp.where(moved, ids, n_loc).astype(jnp.int32)
         else:
             sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
                 sts, eq_t, eq_a, eq_g, horizon, runnable, iinj)
         # --- parcel exchange ----------------------------------------------
-        spiked_all, tsp_all, pdrop = tp.exchange(spiked, t_sp, *targs)
-        # --- insert (shard-local, grouped) --------------------------------
-        valid = spiked_all[pre_l]
-        t_ev = tsp_all[pre_l] + delay_l
-        eq = _insert_byk(eq_t, eq_a, eq_g, t_ev, wa_l, wg_l, valid)
+        spiked_all, tsp_all, pdrop, pbytes = tp.exchange(spiked, t_sp, *targs)
+
+        # --- insert (shard-local): dense = grouped scan of all E/n_shards
+        # in-edges; compact = gather only the spiking set's out-edges that
+        # land in this shard's contiguous global-edge-id slice ------------
+        def _ins_dense(eq_t, eq_a, eq_g):
+            valid = spiked_all[pre_l]
+            t_ev = tsp_all[pre_l] + delay_l
+            return _insert_byk(eq_t, eq_a, eq_g, t_ev, wa_l, wg_l, valid)
+
+        if fanout == "compact":
+            edge_tbl_r = tbls[0]
+
+            def _ins_compact(eq_t, eq_a, eq_g):
+                ids_s, eids, _ = ew_ops.compact_gather(
+                    spiked_all, edge_tbl_r, s_cap, fill=E)
+                idc_s = jnp.minimum(ids_s, n - 1)
+                le = eids - sidx * e_local
+                ok = jnp.logical_and(
+                    (ids_s < n)[:, None],
+                    jnp.logical_and(eids < E,
+                                    jnp.logical_and(le >= 0, le < e_local)))
+                lec = jnp.clip(le, 0, e_local - 1)
+                tgt = lec // spec.k_in          # shard-relative post (grouped)
+                t_ev = tsp_all[idc_s][:, None] + delay_l[lec]
+                eq = qops.wrap(eq_t, eq_a, eq_g, jnp.zeros((), jnp.int32))
+                return qops.insert_batch(
+                    eq, tgt.ravel(), t_ev.ravel(), wa_l[lec].ravel(),
+                    wg_l[lec].ravel(), ok.ravel())
+
+            eq = jax.lax.cond(spiked_all.sum() <= s_cap, _ins_compact,
+                              _ins_dense, eq_t, eq_a, eq_g)
+        else:
+            eq = _ins_dense(eq_t, eq_a, eq_g)
         nd = jax.lax.psum(nd.sum(), flat)
         nrs = jax.lax.psum(nrs.sum(), flat)
         dropped = jax.lax.psum(eq.dropped + pdrop, flat)
-        return (sts, eq.t, eq.w_ampa, eq.w_gaba, spiked, t_sp, nd, nrs,
-                dropped)
+        out = (sts, eq.t, eq.w_ampa, eq.w_gaba, spiked, t_sp, nd, nrs,
+               dropped, pbytes)
+        if incremental:
+            out += (horizon, prev_bnd, moved_prev)
+        return out
+
+    # carried-extra specs: horizon [N] sharded, boundary-clock vector
+    # replicated (the all_gather output IS replicated), moved ids [S*cap]
+    # sharded (each shard's own compact batch)
+    carry_specs = (P(flat), P(None), P(flat)) if incremental else ()
 
     def fap_round(sts, eq_t, eq_a, eq_g, pre, post, delay, w_a, w_g, iinj,
-                  *targs):
+                  *rest):
         if optimized:
             # per-leaf specs: leading neuron dim sharded over every axis
             sts_specs = jax.tree_util.tree_map(
@@ -197,12 +351,13 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
             fn_l = shard_map(
                 _round_local, mesh=mesh,
                 in_specs=(sts_specs, n2, n2, n2, P(flat), P(flat), P(flat),
-                          P(flat), P(flat)) + tp.in_specs,
+                          P(flat), P(flat)) + carry_specs + tp.in_specs
+                + tbl_specs,
                 out_specs=(sts_specs, n2, n2, n2, P(flat), P(flat), P(), P(),
-                           P()),
+                           P(), P()) + carry_specs,
                 check_rep=False)
             return fn_l(sts, eq_t, eq_a, eq_g, pre, delay, w_a, w_g, iinj,
-                        *targs)
+                        *rest)
         t_clock = sts.t
         dnet = xc.DeviceNet(pre, post, delay, w_a, w_g)
         horizon = xc.horizon_times(dnet, n, t_clock, spec.t_end,
@@ -218,7 +373,7 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
         eq = qops.wrap(eq_t, eq_a, eq_g, jnp.zeros((), jnp.int32))
         eq = qops.insert(eq, post, t_ev, w_a, w_g, valid)
         return (sts, eq.t, eq.w_ampa, eq.w_gaba, spiked, t_sp, nd.sum(),
-                nrs.sum(), eq.dropped)
+                nrs.sum(), eq.dropped, jnp.zeros((), jnp.int32))
 
     # ---- example args (ShapeDtypeStructs) and shardings -------------------
     f8 = jnp.float64
@@ -236,7 +391,16 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
         jax.ShapeDtypeStruct((E,), f8),                # w_ampa
         jax.ShapeDtypeStruct((E,), f8),                # w_gaba
         jax.ShapeDtypeStruct((n,), f8),                # iinj
-    ) + (tp.example_args if tp is not None else ())
+    )
+    carry_args = ()
+    if incremental:
+        carry_args = (
+            jax.ShapeDtypeStruct((n,), f8),                      # horizon
+            jax.ShapeDtypeStruct((sf_len,), f8),                 # prev_bnd
+            jax.ShapeDtypeStruct((n_shards * cap,), jnp.int32),  # moved ids
+        )
+    args = args + carry_args + \
+        (tp.example_args if tp is not None else ()) + tbl_args
 
     def st_spec(leaf):
         return NamedSharding(mesh, P(flat, *([None] * (leaf.ndim - 1))))
@@ -246,9 +410,11 @@ def build_fap_round(model: CellModel, spec: PaperNeuroSpec, mesh,
         sts)
     esh = NamedSharding(mesh, nshard)
     n2 = NamedSharding(mesh, P(flat, None))
+    carry_sh = tuple(NamedSharding(mesh, s) for s in carry_specs)
     in_shardings = (sts_sh, n2, n2, n2, esh, esh, esh, esh, esh,
-                    NamedSharding(mesh, nshard)) + \
-        (tp.shardings if tp is not None else ())
+                    NamedSharding(mesh, nshard)) + carry_sh + \
+        (tp.shardings if tp is not None else ()) + \
+        tuple(NamedSharding(mesh, s) for s in tbl_specs)
     return fap_round, args, in_shardings
 
 
@@ -260,7 +426,9 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
                  exchange: ExchangeSpec = ExchangeSpec(),
                  ev_cap: int = 32, horizon_cap: float = 2.0,
                  max_rounds: int = 400, spk_cap: int = 128,
-                 placement=None, batch: str = "dense", batch_cap: int = 0):
+                 placement=None, batch: str = "dense", batch_cap: int = 0,
+                 fanout: str = "dense", spike_cap: int = 0,
+                 horizon: str = "full", move_cap: int = 0):
     """Drive the SPMD round to t_end on a concrete network; the host loop
     records spike trains and accumulates the per-round telemetry into the
     standard ``RunResult`` (dropped = queue + parcel overflow — detected,
@@ -272,9 +440,14 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
     state, so results stay in the caller's neuron order while the notify
     frontier and parcel routing shrink with the realized locality.
 
-    batch / batch_cap: forwarded to ``build_fap_round`` — "compact" runs
-    the shard-local advance on the compacted runnable frontier only
-    (``RunResult.sched`` telemetry is not collected on the SPMD path).
+    batch / batch_cap / fanout / spike_cap / horizon / move_cap: forwarded
+    to ``build_fap_round`` — "compact" runs the shard-local advance
+    (delivery) on the compacted runnable (spiking) set only, and
+    horizon="incremental" carries the dependency horizon across rounds
+    recomputing only frontier-fed rows (``RunResult.sched`` telemetry is
+    not collected on the SPMD path; ``RunResult.comm`` records the
+    realized parcel bytes summed over rounds — with the ragged transport
+    this is the per-round class choice made visible).
     """
     from repro.core import events as ev
     from repro.core.exec_bsp import RunResult
@@ -297,7 +470,9 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
                                          optimized=optimized, queue=queue,
                                          wheel=wheel, transport=transport,
                                          exchange=exchange, net=net,
-                                         batch=batch, batch_cap=batch_cap)
+                                         batch=batch, batch_cap=batch_cap,
+                                         fanout=fanout, spike_cap=spike_cap,
+                                         horizon=horizon, move_cap=move_cap)
     qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
     Y = xc.batch_init(model, n)
@@ -305,30 +480,48 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
     eq = qops.make(n)
     eq_t, eq_a, eq_g = eq.t, eq.w_ampa, eq.w_gaba
     dnet = xc.to_device(net)
+    n_carry = 3 if horizon == "incremental" else 0
     # round-invariant args placed once with the build's shardings (the loop
     # then pays the two transport channels only, no per-round resharding)
     static = jax.device_put(
         (dnet.pre, dnet.post, dnet.delay, dnet.w_ampa, dnet.w_gaba, iinj_v)
-        + ex_args[10:], in_sh[4:])
+        + ex_args[10 + n_carry:],
+        in_sh[4:10] + in_sh[10 + n_carry:])
+    carry = ()
+    if n_carry:
+        # seed exactly what a first-round full recompute would produce:
+        # clocks are all-zero, so the full-width scatter-min over the
+        # global edge list equals the shard-local notify-table chain
+        hor0 = xc.horizon_times(dnet, n, jnp.zeros((n,), jnp.float64),
+                                t_end, horizon_cap=horizon_cap)
+        prev0 = jnp.zeros(ex_args[11].shape, jnp.float64)  # boundary clocks
+        moved0 = jnp.full(ex_args[12].shape, n // int(np.prod(
+            [mesh.shape[a] for a in mesh.axis_names])), jnp.int32)
+        carry = tuple(jax.device_put((hor0, prev0, moved0), in_sh[10:13]))
     jfn = jax.jit(fn, in_shardings=in_sh)
     rec = ev.make_spike_record(n, spk_cap)
     neuron_ids = jnp.arange(n, dtype=jnp.int32)    # hoisted round constant
     n_ev = n_rs = n_drop = 0
+    p_bytes = 0
     rounds = 0
     while rounds < max_rounds:
-        sts, eq_t, eq_a, eq_g, spiked, t_sp, nd, nrs, dropped = jfn(
-            sts, eq_t, eq_a, eq_g, *static)
+        out = jfn(sts, eq_t, eq_a, eq_g, *static[:6], *carry, *static[6:])
+        (sts, eq_t, eq_a, eq_g, spiked, t_sp, nd, nrs, dropped,
+         pbytes) = out[:10]
+        carry = out[10:]
         rec = ev.record_spikes(rec, neuron_ids, t_sp, spiked)
         n_ev += int(nd)
         n_rs += int(nrs)
         n_drop += int(dropped)
+        p_bytes += int(pbytes)
         rounds += 1
         if float(sts.t.min()) >= t_end - 1e-9 or bool(sts.failed.any()):
             break
     res = RunResult(rec, sts.nst.sum(), jnp.asarray(n_ev, jnp.int32),
                     jnp.asarray(n_rs, jnp.int32),
                     jnp.asarray(n_drop, jnp.int32), sts.failed.any(),
-                    sts.zn[:, 0])
+                    sts.zn[:, 0],
+                    comm={"parcel_bytes": p_bytes, "rounds": rounds})
     if pl is not None:
         res = plc.unpermute_result(res, pl)
     return res, rounds

@@ -138,6 +138,121 @@ def compact_ids_pallas(mask, *, cap: int, block_n: int = BN_DEFAULT,
     return ids, cnt[0, 0]
 
 
+def _compact_gather_kernel(mask_ref, tbl_ref, ids_ref, rows_ref, cnt_ref, *,
+                           cap, bn, mo):
+    """``_compact_ids_kernel`` generalised to also gather the rows of a
+    static [N, MO] table for the set lanes — the compact fan-out's
+    edge-index emitter: slot r of the output holds the table row of the
+    r-th set lane.  Same blocked [cap, BN] one-hot placement, accumulated
+    +1-biased across grid steps; the row gather is MO masked column
+    reductions (compares and sums only — no gather, scatter or sort
+    inside the kernel)."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        ids_ref[...] = jnp.zeros((1, cap), jnp.int32)
+        rows_ref[...] = jnp.zeros((cap, mo), jnp.int32)
+        cnt_ref[...] = jnp.zeros((1, 1), jnp.int32)
+
+    base = cnt_ref[0, 0]
+    msk = mask_ref[...]                            # [1, BN] i32
+    tbl = tbl_ref[...]                             # [BN, MO] i32
+    csum = jnp.cumsum(msk, axis=-1).astype(jnp.int32)
+    pos = base + csum - msk                        # global rank where mask=1
+    slot = jax.lax.broadcasted_iota(jnp.int32, (cap, bn), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (cap, bn), 1)
+    hit = jnp.logical_and(pos == slot, msk == 1)   # [cap, BN]
+    gid1 = step * bn + col + 1                     # global index, +1-biased
+    ids_ref[...] += jnp.sum(jnp.where(hit, gid1, 0),
+                            axis=1).astype(jnp.int32)[None, :]
+    for m in range(mo):
+        row1 = tbl[:, m][None, :] + 1              # [1, BN], +1-biased
+        rows_ref[:, m] += jnp.sum(jnp.where(hit, row1, 0),
+                                  axis=1).astype(jnp.int32)
+    cnt_ref[...] = (base + csum[0, -1]).astype(jnp.int32)[None, None]
+
+
+def compact_gather_pallas(mask, table, *, cap: int, fill: int,
+                          block_n: int = BN_DEFAULT, interpret: bool = True):
+    """Compact a bool[N] mask AND gather ``table``'s rows of its set lanes.
+
+    table: i32[N, MO].  Returns (ids i32[cap] — indices of the first
+    ``cap`` set lanes in index order, sentinel N for empty slots;
+    rows i32[cap, MO] — table[ids], ``fill`` for empty slots; count i32 —
+    total set lanes, may exceed cap).  N must be a multiple of block_n
+    (the ops wrapper pads).
+    """
+    (N,) = mask.shape
+    MO = table.shape[1]
+    assert N % block_n == 0, (N, block_n)
+    kernel = functools.partial(_compact_gather_kernel, cap=cap, bn=block_n,
+                               mo=MO)
+    acc, rows, cnt = pl.pallas_call(
+        kernel,
+        grid=(N // block_n,),
+        in_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i)),
+                  pl.BlockSpec((block_n, MO), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((1, cap), lambda i: (0, 0)),
+                   pl.BlockSpec((cap, MO), lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((1, cap), jnp.int32),
+                   jax.ShapeDtypeStruct((cap, MO), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)),
+        interpret=interpret,
+    )(mask.astype(jnp.int32).reshape(1, N), table.astype(jnp.int32))
+    ids = jnp.where(acc[0] > 0, acc[0] - 1, N).astype(jnp.int32)
+    filled = acc[0] > 0
+    rows = jnp.where(filled[:, None], rows - 1, fill).astype(jnp.int32)
+    return ids, rows, cnt[0, 0]
+
+
+def _segment_rank_kernel(key_ref, rank_ref, *, be):
+    """Rank of each event within its key group, in event-index order: one
+    [BE, BE] pairwise-equality pass per (j-block, i-block) grid cell — no
+    per-round key table, no scatter, no sort.  Ranks accumulate across
+    i-blocks (grid dim 1 iterates the strictly-earlier blocks first) and
+    are clipped at ``max_rank`` by the wrapper."""
+    jb, ib = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(ib == 0)
+    def _init():
+        rank_ref[...] = jnp.zeros((1, be), jnp.int32)
+
+    @pl.when(ib <= jb)
+    def _accum():
+        kj = key_ref[0, pl.dslice(jb * be, be)]        # [BE] this block's keys
+        ki = key_ref[0, pl.dslice(ib * be, be)]        # [BE] earlier block
+        same = kj[:, None] == ki[None, :]              # [BE, BE]
+        jj = jax.lax.broadcasted_iota(jnp.int32, (be, be), 0)
+        ii = jax.lax.broadcasted_iota(jnp.int32, (be, be), 1)
+        earlier = jnp.where(jb == ib, ii < jj, True)   # strict on diagonal
+        rank_ref[...] += jnp.sum(jnp.logical_and(same, earlier),
+                                 axis=1).astype(jnp.int32)[None, :]
+
+
+def segment_rank_pallas(key, *, max_rank: int, block_e: int = 512,
+                        interpret: bool = True):
+    """Pairwise segment ranking for the wheel's generic insert: rank[j] =
+    |{i < j : key[i] == key[j]}| clipped at ``max_rank`` — one VMEM pass
+    over [BE, BE] tiles instead of ``segment_rank``'s ``max_rank`` rounds
+    of scatter-min over an O(n_keys) table.  E is padded to block_e by the
+    ops wrapper."""
+    (E,) = key.shape
+    assert E % block_e == 0, (E, block_e)
+    nb = E // block_e
+    kernel = functools.partial(_segment_rank_kernel, be=block_e)
+    rank = pl.pallas_call(
+        kernel,
+        grid=(nb, nb),
+        in_specs=[pl.BlockSpec((1, E), lambda j, i: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_e), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, E), jnp.int32),
+        interpret=interpret,
+    )(key.astype(jnp.int32).reshape(1, E))
+    return jnp.minimum(rank[0], max_rank)
+
+
 def compact_rows_pallas(mask, values, *, cap: int, interpret: bool = True):
     """Row-wise sort-free stream compaction (the spike-parcel packer).
 

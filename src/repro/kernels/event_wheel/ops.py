@@ -14,9 +14,11 @@ import jax.numpy as jnp
 
 from repro.kernels import use_interpret
 from repro.kernels.event_wheel.event_wheel import (BN_DEFAULT,
+                                                   compact_gather_pallas,
                                                    compact_ids_pallas,
                                                    compact_rows_pallas,
-                                                   horizon_score_pallas)
+                                                   horizon_score_pallas,
+                                                   segment_rank_pallas)
 
 
 def select_threshold(score, k: int, n_iters: int = 48):
@@ -126,6 +128,76 @@ def compact_ids(mask, cap: int, *, impl: str = "auto",
     ids, cnt = compact_ids_pallas(m, cap=cap, block_n=block_n,
                                   interpret=use_interpret())
     return jnp.minimum(ids, n).astype(jnp.int32), cnt
+
+
+def compact_gather(mask, table, cap: int, *, fill: int = None,
+                   impl: str = "auto", block_n: int = BN_DEFAULT):
+    """``compact_ids`` generalised to emit *gather rows*: compact a bool[N]
+    mask into the first ``cap`` set lanes AND gather the rows of a static
+    i32[N, MO] table for them in the same pass — the edge-index emitter of
+    the compact fan-out path (``fanout="compact"``), where ``table`` is
+    ``exec_common.out_edge_table`` and the emitted rows are the spiking
+    lanes' out-edge ids.
+
+    Returns (ids i32[cap] — set-lane indices in index order, sentinel N;
+    rows i32[cap, MO] — table[ids], ``fill`` (default N, callers pass E)
+    for empty slots; count i32 — total set lanes, may exceed cap: the
+    caller must fall back, never drop).  ``impl="auto"`` picks the blocked
+    Pallas kernel on real TPU and the scatter-oracle + XLA-gather path
+    elsewhere.
+    """
+    (n,) = mask.shape
+    if fill is None:
+        fill = n
+    if impl == "auto":
+        impl = "jnp" if use_interpret() else "pallas"
+    if impl == "jnp":
+        from repro.kernels.event_wheel import ref
+        return ref.compact_gather_ref(mask, table, cap, fill)
+    if impl != "pallas":
+        raise ValueError(f"unknown compact_gather impl {impl!r}")
+    n_pad = (-n) % block_n
+    m, tbl = mask, table
+    if n_pad:
+        m = jnp.concatenate([m, jnp.zeros((n_pad,), m.dtype)])
+        tbl = jnp.concatenate(
+            [tbl, jnp.zeros((n_pad, tbl.shape[1]), tbl.dtype)])
+    ids, rows, cnt = compact_gather_pallas(m, tbl, cap=cap, fill=fill,
+                                           block_n=block_n,
+                                           interpret=use_interpret())
+    return jnp.minimum(ids, n).astype(jnp.int32), rows, cnt
+
+
+def segment_rank(key, n_keys: int, max_rank: int, *, impl: str = "auto",
+                 block_e: int = 512):
+    """Rank of each event within its key group, in event-index order —
+    the wheel's generic-insert slot ranking, dispatched (the ROADMAP
+    follow-up from PR 1).
+
+    ``impl="pallas"`` runs the pairwise [BE, BE] tile kernel: one VMEM
+    pass, no per-round O(n_keys) key table; ``"scatter"`` the original
+    ``max_rank``-round scatter-min (``sched.wheel.segment_rank``);
+    ``"auto"`` picks pallas on real TPU, scatter elsewhere.  Ranks agree
+    on all events with key < n_keys (invalid events differ: the scatter
+    path parks them at ``max_rank``, the pairwise path ranks them among
+    themselves — both are masked out by the insert's validity test).
+    """
+    if impl == "auto":
+        impl = "scatter" if use_interpret() else "pallas"
+    if impl == "scatter":
+        from repro.sched import wheel as wh
+        return wh.segment_rank(key, n_keys, max_rank)
+    if impl != "pallas":
+        raise ValueError(f"unknown segment_rank impl {impl!r}")
+    (E,) = key.shape
+    e_pad = (-E) % block_e
+    k = key
+    if e_pad:
+        # pad with a never-used key so pad ranks stay self-contained
+        k = jnp.concatenate([k, jnp.full((e_pad,), n_keys + 1, key.dtype)])
+    return segment_rank_pallas(k, max_rank=max_rank,
+                               block_e=block_e,
+                               interpret=use_interpret())[:E]
 
 
 def by_post_layout(net):

@@ -40,6 +40,28 @@ def compact_ids_ref(mask, cap: int):
     return ids, csum[-1] if n else jnp.zeros((), jnp.int32)
 
 
+def compact_gather_ref(mask, table, cap: int, fill: int):
+    """Pure-jnp oracle for the compact-and-gather kernel: gather-id
+    compaction (``compact_ids_ref``) followed by one XLA row gather of the
+    static table.  Returns (ids i32[cap], rows i32[cap, MO] — table[ids]
+    with ``fill`` in empty slots, count i32)."""
+    n = mask.shape[0]
+    ids, cnt = compact_ids_ref(mask, cap)
+    rows = jnp.where((ids < n)[:, None],
+                     table[jnp.minimum(ids, n - 1)], fill).astype(jnp.int32)
+    return ids, rows, cnt
+
+
+def segment_rank_ref(key, max_rank: int):
+    """O(E^2) pairwise oracle for the segment-ranking kernel: rank[j] =
+    |{i < j : key[i] == key[j]}| clipped at ``max_rank``."""
+    E = key.shape[0]
+    same = key[:, None] == key[None, :]
+    earlier = jnp.arange(E)[None, :] < jnp.arange(E)[:, None]
+    return jnp.minimum(jnp.sum(jnp.logical_and(same, earlier), axis=1),
+                       max_rank).astype(jnp.int32)
+
+
 def compact_rows_ref(mask, values, *, cap: int):
     """Pure-jnp oracle for the spike-compaction kernel: cumsum ranks + a
     masked scatter (still sort-free — the dense-queue argsort is the thing

@@ -175,8 +175,14 @@ def collective_bytes(hlo_text: str) -> Tuple[int, dict]:
 
 _OPNAME_RE = re.compile(r'op_name="([^"]*)"')
 
-# the exchange layer's channel tags (see distributed/exchange.py)
-CHANNEL_TAGS = ("exchange_notify", "exchange_parcel")
+# the exchange layer's channel tags (see distributed/exchange.py).  The
+# ragged transport's per-class parcel scopes (exchange_parcel_c<cap>) match
+# the exchange_parcel substring, so the default attribution reports the
+# static sum over all class branches; for a per-class breakdown pass the
+# class tags WITH their trailing scope delimiter ("exchange_parcel_c4/",
+# via exchange.class_tag) — a bare "exchange_parcel_c1" is a string
+# prefix of "exchange_parcel_c12" and would swallow its bytes.
+CHANNEL_TAGS = ("exchange_notify", "exchange_parcel", "exchange_counts")
 
 
 def collective_channel_bytes(hlo_text: str,

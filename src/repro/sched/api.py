@@ -25,6 +25,8 @@ class QueueOps(NamedTuple):
     make: Callable            # (n,) -> queue
     insert: Callable          # (eq, target[E], t[E], wa[E], wg[E], valid[E]) -> eq
     insert_grouped: Callable  # (eq, t[N,k], wa[N,k], wg[N,k], valid[N,k]) -> eq
+    insert_batch: Callable    # insert for a small batch: flat in N (the
+    #                           compact fan-out's per-spike edge batches)
     next_time: Callable       # (eq,) -> f64[N]
     deliver_until: Callable   # (eq, t_dl[N]) -> (eq, wa[N], wg[N], cnt[N])
     wrap: Callable            # (t, wa, wg, dropped) -> queue
@@ -45,16 +47,23 @@ def get_queue_ops(queue: str = "dense", *, ev_cap: int = 64,
             make=lambda n: ev.make_queue(n, ev_cap),
             insert=ev.insert,
             insert_grouped=_dense_insert_grouped,
+            insert_batch=ev.insert_rows,
             next_time=ev.next_time,
             deliver_until=ev.deliver_until,
             wrap=ev.EventQueue,
         )
     if queue == "wheel":
+        # the wheel's generic insert doubles as the batch insert: no slot
+        # argsort anywhere, and on TPU the pairwise rank kernel is N-free.
+        # Off-TPU the scatter-min ranking still allocates its O(N*B) key
+        # table per call (cheap memsets, but not strictly flat — see the
+        # ROADMAP follow-up on batch-domain rank remapping)
         return QueueOps(
             name="wheel", capacity=wheel.capacity,
             make=lambda n: wh.make_wheel(n, wheel),
             insert=functools.partial(wh.insert, wheel),
             insert_grouped=functools.partial(wh.insert_grouped, wheel),
+            insert_batch=functools.partial(wh.insert, wheel),
             next_time=wh.next_time,
             deliver_until=wh.deliver_until,
             wrap=WheelQueue,

@@ -159,13 +159,16 @@ def _place(spec: WheelSpec, free_rows, rank, valid):
 
 
 def insert(spec: WheelSpec, eq: WheelQueue, target, t_ev, w_ampa, w_gaba,
-           valid, rank: Optional[jnp.ndarray] = None) -> WheelQueue:
+           valid, rank: Optional[jnp.ndarray] = None,
+           rank_impl: str = "auto") -> WheelQueue:
     """Drop-in generic insert (same signature as ``events.insert``): E
     candidate events to arbitrary targets, O(E) scatters, no sort.
 
     ``rank`` may carry precomputed ranks within (target, bucket) groups
-    (e.g. from a static edge layout); when None they are derived with
-    ``segment_rank``.
+    (e.g. from a static edge layout); when None they are derived through
+    ``kernels.event_wheel.ops.segment_rank`` — the pairwise Pallas tile
+    kernel on real TPU (one VMEM pass, no per-round key table), the
+    iterative scatter-min elsewhere (``rank_impl`` forces either).
     """
     n, cap = eq.t.shape
     B, S = spec.n_buckets, spec.bucket_slots
@@ -173,7 +176,8 @@ def insert(spec: WheelSpec, eq: WheelQueue, target, t_ev, w_ampa, w_gaba,
     tgt = jnp.where(valid, target, n)
     key = jnp.where(valid, target * B + bucket, n * B)
     if rank is None:
-        rank = segment_rank(key, n * B, S)
+        from repro.kernels.event_wheel import ops as ew_ops
+        rank = ew_ops.segment_rank(key, n * B, S, impl=rank_impl)
     tgt_c = jnp.clip(tgt, 0, n - 1)
     free = jnp.isinf(eq.t).reshape(n, B, S)
     free_rows = free[tgt_c, bucket]                          # [E, S]

@@ -102,13 +102,16 @@ def test_select_active_overflow_keeps_earliest():
 @pytest.mark.parametrize("topo", sorted(TOPOS))
 @pytest.mark.parametrize("queue", ["dense", "wheel"])
 def test_fap_compact_equals_dense(model, iinj, topo, queue):
+    """Both compact knobs at once (ISSUE 4 batch + ISSUE 5 fan-out): the
+    fully activity-proportional round == the dense round, event for
+    event, on every topology x queue."""
     assert set(TOPOS) == set(TOPOLOGIES)
     net = network.make_network(N, k_in=K, seed=3, topology=TOPOS[topo])
     kw = dict(queue=queue)
     r_d, rounds_d = exec_fap.make_fap_vardt_runner(
         model, net, iinj, T_END, **kw)()
     r_c, rounds_c = exec_fap.make_fap_vardt_runner(
-        model, net, iinj, T_END, batch="compact", **kw)()
+        model, net, iinj, T_END, batch="compact", fanout="compact", **kw)()
     assert int(r_d.rec.count.sum()) > 0        # network actually active
     _exact_same(r_d, r_c)
     assert int(rounds_d) == int(rounds_c)
@@ -194,6 +197,69 @@ def test_unknown_batch_mode_rejected(model, iinj):
         exec_fap.make_fap_vardt_runner(model, net, iinj, T_END, batch="x")
     with pytest.raises(ValueError, match="batch"):
         exec_bsp.make_bsp_vardt_runner(model, net, iinj, T_END, batch="x")
+    with pytest.raises(ValueError, match="fanout"):
+        exec_fap.make_fap_vardt_runner(model, net, iinj, T_END, fanout="x")
+    with pytest.raises(ValueError, match="fanout"):
+        exec_bsp.make_bsp_vardt_runner(model, net, iinj, T_END, fanout="x")
+
+
+# ---------------------------------------------------------------------------
+# compact fan-out (ISSUE 5): bursty-regime identity incl. the
+# spike_cap-overflow fallback path — overflow falls back, never drops
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("queue", ["dense", "wheel"])
+def test_fanout_compact_burst_identity(model, queue):
+    """Forced synchronized burst: every neuron driven well above
+    threshold fires nearly every round.  Compact fan-out must equal the
+    dense fan-out event for event both when the spiking set fits
+    spike_cap (compact branch) and when it overflows every round
+    (spike_cap=1 -> dense fallback branch); nothing may ever drop."""
+    net = network.make_network(N, k_in=K, seed=3)
+    iinj_burst = np.full(N, 0.22)              # strong DC: all neurons burst
+    kw = dict(queue=queue, ev_cap=128,
+              wheel=exec_fap.sched.WheelSpec.auto(net))
+    r_d, rounds_d = exec_fap.make_fap_vardt_runner(
+        model, net, iinj_burst, T_END, **kw)()
+    assert int(r_d.rec.count.sum()) >= N       # genuinely bursty
+    for cap in (N, 1):                         # compact branch / fallback
+        r_c, rounds_c = exec_fap.make_fap_vardt_runner(
+            model, net, iinj_burst, T_END, fanout="compact", spike_cap=cap,
+            **kw)()
+        _exact_same(r_d, r_c)
+        assert int(rounds_d) == int(rounds_c)
+
+
+def test_fanout_compact_bsp_and_speculative(model, iinj):
+    """The fan-out knob is wired through BSP vardt and the speculative
+    runner too."""
+    from repro.core import exec_speculative
+    net = network.make_network(N, k_in=K, seed=3)
+    r_d = exec_bsp.run_bsp_vardt(model, net, iinj, T_END)
+    r_c = exec_bsp.run_bsp_vardt(model, net, iinj, T_END, fanout="compact",
+                                 spike_cap=3)
+    _exact_same(r_d, r_c)
+    s_d, _, _ = exec_speculative.make_spec_runner(model, net, iinj, T_END)()
+    s_c, _, _ = exec_speculative.make_spec_runner(
+        model, net, iinj, T_END, fanout="compact", spike_cap=3)()
+    _exact_same(s_d, s_c)
+
+
+def test_batch_cap_auto_picks_from_telemetry(model, iinj):
+    """batch_cap="auto" probes the frontier and picks a power-of-two cap
+    in [floor, N]; the run stays event-for-event identical to dense."""
+    net = network.make_network(N, k_in=K, seed=3)
+    r_d, _ = exec_fap.make_fap_vardt_runner(model, net, iinj, T_END)()
+    run = exec_fap.make_fap_vardt_runner(model, net, iinj, T_END,
+                                         batch="compact", batch_cap="auto")
+    assert isinstance(run.batch_cap, int) and 1 <= run.batch_cap <= N
+    r_a, _ = run()
+    _exact_same(r_d, r_a)
+    # the picker itself: mean frontier * slack, pow2, clipped
+    s = xc.SchedStats(jnp.asarray(1000, jnp.int64), jnp.asarray(0, jnp.int64),
+                      jnp.asarray(0, jnp.int64), jnp.asarray(10, jnp.int32))
+    assert xc.auto_batch_cap(s, 1 << 16) == 256      # 2*100 -> 256
+    assert xc.auto_batch_cap(s, 64) == 64            # clipped at n
+    assert xc.auto_batch_cap(xc.SchedStats.zeros(), 1 << 16) == 32
 
 
 # ---------------------------------------------------------------------------

@@ -308,3 +308,98 @@ def test_bsp_wheel_equals_dense(small_run):
     td, tw = _trains(r_d), _trains(r_w)
     for a, b in zip(td, tw):
         np.testing.assert_allclose(a, b, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 5: compact fan-out building blocks — the compact-and-gather kernel,
+# the pairwise segment-ranking kernel, and the dense queue's flat batch
+# insert (all bit-compared against their reference twins)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,mo,cap", [(40, 3, 8), (300, 5, 16), (256, 4, 300)])
+def test_compact_gather_pallas_matches_ref(n, mo, cap):
+    rng = np.random.default_rng(n + mo)
+    table = jnp.asarray(rng.integers(0, 999, (n, mo)).astype(np.int32))
+    for frac in (0.0, 0.2, 0.9):
+        mask = jnp.asarray(rng.random(n) < frac)
+        ia, ra, ca = ew_ref.compact_gather_ref(mask, table, cap, fill=777)
+        ib, rb, cb = ew_ops.compact_gather(mask, table, cap, fill=777,
+                                           impl="pallas")
+        assert int(ca) == int(cb) == int(mask.sum())
+        np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+        np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+        # slot r holds the table row of the r-th set lane, fill-padded
+        want = np.flatnonzero(np.asarray(mask))[:cap]
+        np.testing.assert_array_equal(np.asarray(ra)[: len(want)],
+                                      np.asarray(table)[want])
+        assert (np.asarray(ra)[len(want):] == 777).all()
+
+
+@pytest.mark.parametrize("E,n_keys,max_rank", [(37, 12, 4), (600, 50, 6),
+                                               (512, 7, 3)])
+def test_segment_rank_pallas_matches_scatter(E, n_keys, max_rank):
+    """The pairwise tile kernel == the iterative scatter-min on every
+    valid event (invalid events are masked by the insert's validity test
+    and may differ)."""
+    rng = np.random.default_rng(E)
+    key = jnp.asarray(rng.integers(0, n_keys + 1, E).astype(np.int32))
+    ra = np.asarray(ew_ops.segment_rank(key, n_keys, max_rank,
+                                        impl="scatter"))
+    rb = np.asarray(ew_ops.segment_rank(key, n_keys, max_rank,
+                                        impl="pallas"))
+    valid = np.asarray(key) < n_keys
+    np.testing.assert_array_equal(ra[valid], rb[valid])
+
+
+def test_wheel_generic_insert_rank_impls_agree():
+    """The wheel's generic insert produces the identical queue through
+    either ranking implementation."""
+    rng = np.random.default_rng(5)
+    n, E = 12, 40
+    tgt = jnp.asarray(rng.integers(0, n, E), jnp.int32)
+    t = jnp.asarray(rng.uniform(0, 4, E))
+    wa = jnp.asarray(rng.exponential(1.0, E))
+    wg = jnp.asarray(rng.exponential(1.0, E))
+    valid = jnp.asarray(rng.random(E) < 0.8)
+    eqs = [sched.insert(SPEC, sched.make_wheel(n, SPEC), tgt, t, wa, wg,
+                        valid, rank_impl=impl)
+           for impl in ("scatter", "pallas")]
+    for a, b in zip(eqs[0], eqs[1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_insert_rows_matches_insert_bitwise():
+    """events.insert_rows (the flat batch insert of the compact fan-out)
+    is bit-identical to events.insert, including drop accounting."""
+    rng = np.random.default_rng(7)
+    n, Q = 13, 6
+    eq = ev.make_queue(n, Q)
+    eq = ev.insert(eq, jnp.asarray(rng.integers(0, n, 10), jnp.int32),
+                   jnp.asarray(rng.uniform(0, 5, 10)), jnp.ones(10),
+                   jnp.zeros(10), jnp.ones(10, bool))
+    for E in (25, 20):
+        tgt = jnp.asarray(rng.integers(0, 2 if E == 20 else n, E), jnp.int32)
+        t = jnp.asarray(rng.uniform(0, 5, E))
+        wa = jnp.asarray(rng.uniform(0, 1, E))
+        wg = jnp.asarray(rng.uniform(0, 1, E))
+        valid = jnp.asarray(rng.random(E) < 0.85)
+        a = ev.insert(eq, tgt, t, wa, wg, valid)
+        b = ev.insert_rows(eq, tgt, t, wa, wg, valid)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        eq = a
+    assert int(eq.dropped) > 0        # the second batch forced overflow
+
+
+def test_insert_rows_jaxpr_touches_no_slot_argsort():
+    """insert_rows may sort the (small) event batch but must not argsort
+    the [N, Q] slot plane: no sort over an N-sized operand."""
+    n, Q, E = 64, 8, 12
+    eq = ev.make_queue(n, Q)
+    args = (jnp.zeros((E,), jnp.int32), jnp.zeros((E,)), jnp.zeros((E,)),
+            jnp.zeros((E,)), jnp.ones((E,), bool))
+    jaxpr = jax.make_jaxpr(ev.insert_rows)(eq, *args)
+    for eqn in jaxpr.jaxpr.eqns:
+        if eqn.primitive.name == "sort":
+            for v in eqn.invars:
+                shape = getattr(v.aval, "shape", ())
+                assert not shape or shape[0] <= E, v.aval
