@@ -38,4 +38,11 @@ echo "== active-set compaction smoke (compact == dense + flat round time) =="
 # delivery axis while the dense paths grow linearly
 REPRO_BENCH_QUICK=1 python -c "from benchmarks import active_set; active_set.run()"
 
+echo "== solver stepping smoke (reuse-don't-rebuild Newton + NDF) =="
+# asserts the Jacobian-freshness policy performs < 0.5 setups per Newton
+# iteration (legacy exactly 1.0), NDF takes >= 10% fewer accepted steps
+# inside the spike-time accuracy envelope, and the per-Newton-round
+# linear algebra beats the per-iteration rebuild by >= 1.3x on CPU
+REPRO_BENCH_QUICK=1 python -c "from benchmarks import solver; solver.run()"
+
 echo "check.sh: all green"

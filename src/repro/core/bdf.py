@@ -10,9 +10,28 @@ with
   * WRMS-norm local error test, eta_{q-1}/eta_q/eta_{q+1} order selection
     (cvPrepareNextStep / cvAdjust{Increase,Decrease}BDF),
   * tstop semantics: a step never crosses ``t_limit`` — this is what makes the
-    FAP execution model *non-speculative* (no backstepping ever needed), and
+    FAP execution model *non-speculative* (no backstepping ever needed),
   * IVP-reset on synaptic discontinuities (order -> 1, fresh h, history
-    discarded) — the cost the paper's event-grouping variants amortise.
+    discarded) — the cost the paper's event-grouping variants amortise,
+  * a CVODE-grade Jacobian-freshness policy (``jac_policy="reuse"``, the
+    default): the Newton matrix M = I - gamma*J~ is assembled and factored
+    ONCE per setup (``CellModel.newton_setup``, CVODE's lsetup) and the
+    stored factors are reused across Newton iterations *and* accepted
+    steps; a rebuild happens only on gamma drift (|gamma/gamma_saved - 1|
+    > DGMAX), a periodic MSBP step counter, convergence-rate decay
+    (crate > CRDOWN after a multi-iteration solve), or after a Newton
+    convergence failure.  A convergence failure with *stale* factors
+    first retries the same step with a fresh setup (CVODE's
+    CV_FAIL_BAD_J path) before shrinking h.  Stale factors change the
+    Newton iteration count, never the accepted state beyond tolerance —
+    the corrector still converges to the exact implicit solution.
+    ``jac_policy="iteration"`` is the legacy knob: re-assemble/factor on
+    every Newton iteration, lowered computation identical to the
+    historical path, and
+  * ``method="ndf"``: the Klopfenstein/Shampine NDF error constants of
+    MATLAB's ode15s wired into the BDF tq coefficients — same corrector,
+    kappa-modified error weighting, h larger by |C_ndf/C_bdf|^(-1/(q+1))
+    at equal tolerance (up to ~26% more step at q=2).
 
 Every function is pure and ``vmap``-compatible: a network of neurons is a
 vmapped pytree of ``BDFState`` with *independent* (t, h, q) per neuron — the
@@ -25,6 +44,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 QMAX = 5
 LMAX = QMAX + 1           # zn rows: 0..QMAX
@@ -47,6 +67,23 @@ MAX_NEF = 7
 HMIN = 1.0e-9             # ms
 MAX_ATTEMPTS = 40
 
+# Jacobian-freshness policy (cvLSetup decision in cvNlsNewton)
+MSBP = 20                 # max steps between setups
+DGMAX = 0.3               # |gamma/gamma_saved - 1| beyond which factors rebuild
+MAX_NCF_RESTART = 4       # consecutive conv failures before the q->1 restart
+
+# NDF (Shampine & Reichelt, ode15s): kappa-modified BDF error constants.
+# ratio[k] = |1 + (k+1) kappa_k gamma_k| is the NDF/BDF error-constant
+# ratio at order k (gamma_k = sum_{j<=k} 1/j); scaling the tq error-test
+# coefficients by it accepts steps larger by ratio^(-1/(k+1)) at equal
+# tolerance.  kappa_5 = 0: BDF5 unchanged (NDF5 would not be stable).
+_NDF_KAPPA = np.array([0.0, -0.1850, -1.0 / 9.0, -0.0823, -0.0415, 0.0])
+_NDF_RATIO = np.ones((LMAX + 1,))
+for _k in range(1, QMAX + 1):
+    _gamk = sum(1.0 / _j for _j in range(1, _k + 1))
+    _NDF_RATIO[_k] = abs(1.0 + (_k + 1) * _NDF_KAPPA[_k] * _gamk)
+del _k, _gamk
+
 
 class BDFState(NamedTuple):
     t: jnp.ndarray            # f64[]
@@ -64,6 +101,12 @@ class BDFState(NamedTuple):
     nncf: jnp.ndarray         # i32[] newton-convergence failures
     nreset: jnp.ndarray       # i32[] IVP resets (event deliveries)
     failed: jnp.ndarray       # bool[]
+    # ---- Jacobian-freshness policy (jac_policy="reuse") ----------------
+    gamma_saved: jnp.ndarray  # f64[] gamma the stored factors were built at
+    nstlp: jnp.ndarray        # i32[] nst at the last setup (MSBP counter)
+    nsetups: jnp.ndarray      # i32[] Newton-matrix assemblies+factorizations
+    jbad: jnp.ndarray         # bool[] factors flagged stale: setup next attempt
+    factors: jnp.ndarray      # f64[n_factors] flat newton_setup factor vector
 
 
 class BDFOptions(NamedTuple):
@@ -72,6 +115,9 @@ class BDFOptions(NamedTuple):
     hmax: float = 1.0e9
     h0: float = -1.0          # <=0: use heuristic
     precond: str = "neuron"   # "neuron" (paper default) | "schur" (exact HH block)
+    method: str = "bdf"       # "bdf" | "ndf" (kappa-modified error constants)
+    jac_policy: str = "reuse" # "reuse" (CVODE freshness policy) |
+    #                           "iteration" (legacy: setup every Newton iter)
 
 
 def _wrms(x, y, opts: BDFOptions):
@@ -86,7 +132,14 @@ def reinit(model, t, y, iinj, opts: BDFOptions, counters=None,
     ``f`` may carry a precomputed rhs evaluation at (t, y) — the fused
     deliver/step path (``step_or_deliver``) shares the rhs stream of the
     Newton corrector with the reset heuristic instead of paying a second
-    evaluation."""
+    evaluation.
+
+    The factor cache starts empty (``jbad=True``): the first step attempt
+    runs a setup, so a reset costs no factorization of its own."""
+    if opts.method not in ("bdf", "ndf"):
+        raise ValueError(f"unknown method {opts.method!r}")
+    if opts.jac_policy not in ("reuse", "iteration"):
+        raise ValueError(f"unknown jac_policy {opts.jac_policy!r}")
     if f is None:
         f = model.rhs(t, y, iinj)
     fn = _wrms(f, y, opts)
@@ -97,18 +150,23 @@ def reinit(model, t, y, iinj, opts: BDFOptions, counters=None,
     zn = jnp.zeros((LMAX, n), y.dtype).at[0].set(y).at[1].set(h * f)
     tau = jnp.zeros((LMAX + 1,), y.dtype).at[1].set(h)
     z = jnp.zeros((), jnp.int32)
-    c = counters or (z, z + 1, z, z, z, z)
+    c = counters or (z, z + 1, z, z, z, z, z)
     return BDFState(t=jnp.asarray(t, y.dtype), h=h, q=jnp.ones((), jnp.int32),
                     zn=zn, tau=tau, qwait=jnp.full((), 2, jnp.int32),
                     etamax=jnp.asarray(ETAMX1), acor_save=jnp.zeros_like(y),
                     nst=c[0], nfe=c[1], nni=c[2], netf=c[3], nncf=c[4],
-                    nreset=c[5], failed=jnp.zeros((), bool))
+                    nreset=c[5], failed=jnp.zeros((), bool),
+                    gamma_saved=jnp.ones((), y.dtype),
+                    nstlp=jnp.asarray(c[0], jnp.int32), nsetups=c[6],
+                    jbad=jnp.ones((), bool),
+                    factors=jnp.zeros((model.n_factors(opts.precond),),
+                                      y.dtype))
 
 
 # --------------------------------------------------------------------------
 # coefficient machinery (cvSetBDF / cvSetTqBDF), masked static loops to QMAX
 # --------------------------------------------------------------------------
-def _set_bdf_coeffs(q, h, tau):
+def _set_bdf_coeffs(q, h, tau, method: str = "bdf"):
     qf = q.astype(h.dtype)
     l = jnp.zeros((LMAX,), h.dtype).at[0].set(1.0).at[1].set(1.0)
     alpha0 = jnp.asarray(-1.0, h.dtype)
@@ -161,6 +219,16 @@ def _set_bdf_coeffs(q, h, tau):
     A6 = alpha0_hat - xi_inv_p
     Cppinv = (1.0 - A6 + A5) / A2
     tq3 = jnp.abs(Cppinv / (xi_inv_p * (qf + 2.0) * A5))
+    if method == "ndf":
+        # quasi-NDF: BDF corrector, NDF error weighting.  tq1/tq2/tq3
+        # multiply the correction norms into the scaled local-error
+        # estimates at orders q-1/q/q+1, so scaling them by the (< 1)
+        # NDF/BDF error-constant ratio presents the smaller NDF
+        # truncation constants to the error test and step selection.
+        r = jnp.asarray(_NDF_RATIO, h.dtype)
+        tq1 = tq1 * r[jnp.clip(q - 1, 0, LMAX)]
+        tq2 = tq2 * r[jnp.clip(q, 0, LMAX)]
+        tq3 = tq3 * r[jnp.clip(q + 1, 0, LMAX)]
     tq4 = NLS_COEF / tq2
     gamma = h / l[1]
     return l, (tq1, tq2, tq3, tq4, tq5), gamma
@@ -275,11 +343,7 @@ def _step_impl(model, st: BDFState, t_limit, iinj, opts: BDFOptions,
     dtype = st.zn.dtype
     y_ref = st.zn[0]
     t0 = st.t
-    # restart term for the q->1 error-failure path (cvStep's small-NEF
-    # restart rebuilds zn[1] = h * f(t, zn[0])): zn[0] and t are only
-    # touched on accept, so the value is attempt-invariant — one
-    # evaluation hoisted out of the retry loop serves every attempt
-    f_restart = model.rhs(t0, y_ref, iinj)
+    reuse = opts.jac_policy == "reuse"
 
     def wrms(x, y):
         return _wrms(x, y, opts)
@@ -295,13 +359,38 @@ def _step_impl(model, st: BDFState, t_limit, iinj, opts: BDFOptions,
         zn, h = _rescale(st.zn, st.tau, st.h, st.q, eta0)
         st = st._replace(zn=zn, h=h)
 
-        l, tq, gamma = _set_bdf_coeffs(st.q, st.h, st.tau)
+        l, tq, gamma = _set_bdf_coeffs(st.q, st.h, st.tau, method=opts.method)
         tq1, tq2, tq3, tq4, tq5 = tq
 
         zn_pred = _predict(st.zn, st.q)
         ypred = zn_pred[0]
         zdot_term = zn_pred[1] / l[1]            # gamma * ydot_pred
         t_new = st.t + st.h
+
+        # ---- Jacobian freshness (cvNlsNewton's callSetup decision) ---------
+        # Setup is hoisted OUT of the Newton loop: one assembly+factorization
+        # per attempt at most (vs one per iteration on the legacy path), and
+        # usually zero — the stored factors survive across accepted steps
+        # until gamma drifts, MSBP steps pass, or convergence degrades.
+        if reuse:
+            gamrat = gamma / st.gamma_saved
+            need = jnp.logical_or(
+                st.jbad,
+                jnp.logical_or(st.nst - st.nstlp >= MSBP,
+                               jnp.abs(gamrat - 1.0) > DGMAX))
+            factors = jax.lax.cond(
+                need,
+                lambda: model.newton_setup(ypred, gamma, mode=opts.precond),
+                lambda: st.factors)
+            st = st._replace(
+                factors=factors,
+                gamma_saved=jnp.where(need, gamma, st.gamma_saved),
+                nstlp=jnp.where(need, st.nst, st.nstlp),
+                nsetups=st.nsetups + need.astype(jnp.int32),
+                jbad=jnp.zeros((), bool))
+            jcur = need                          # factors current for this y?
+        else:
+            jcur = jnp.ones((), bool)            # rebuilt every iteration
 
         # ---- modified Newton (cvNlsNewton) ---------------------------------
         def newton_body(c):
@@ -316,7 +405,10 @@ def _step_impl(model, st: BDFState, t_limit, iinj, opts: BDFOptions,
                 f = model.rhs(t_eval, y_eval, iinj)
             f_keep = jnp.where(m == 0, f, f_keep)
             G = acor + zdot_term - gamma * f
-            delta = model.solve_newton_mat(y, gamma, -G, mode=opts.precond)
+            if reuse:
+                delta = model.newton_solve(st.factors, -G, mode=opts.precond)
+            else:
+                delta = model.solve_newton_mat(y, gamma, -G, mode=opts.precond)
             dnrm = wrms(delta, y_ref)
             y = y + delta
             acor = acor + delta
@@ -340,19 +432,71 @@ def _step_impl(model, st: BDFState, t_limit, iinj, opts: BDFOptions,
                 jnp.ones((), dtype), jnp.zeros((), jnp.int32),
                 jnp.zeros((), bool), jnp.zeros((), bool), st.nni, st.nfe,
                 f_first)
-        y, acor, _, _, _, conv, _, nni, nfe, f_first = jax.lax.while_loop(
+        y, acor, _, crate, m_it, conv, _, nni, nfe, f_first = jax.lax.while_loop(
             newton_cond, newton_body, init)
-        st = st._replace(nni=nni, nfe=nfe)
+        nsetups = st.nsetups if reuse else st.nsetups + (nni - st.nni)
+        st = st._replace(nni=nni, nfe=nfe, nsetups=nsetups)
 
         acnrm = wrms(acor, y_ref)
         dsm = acnrm * tq2
 
+        err_ok = dsm <= 1.0
+        accepted = jnp.logical_and(conv, err_ok)
+        if deliver is not None:
+            # deliver lanes terminate after one attempt; their step state
+            # is discarded by the caller in favour of the order-1 reset
+            accepted = jnp.logical_or(accepted, deliver)
+        # stale-factor convergence failure (CVODE's CV_FAIL_BAD_J): retry
+        # the SAME step with a forced fresh setup before any h reduction
+        stale = (jnp.logical_and(~conv, ~jcur) if reuse
+                 else jnp.zeros((), bool))
+
+        # shared BDF1-restart evaluation: both failure ladders rebuild
+        # zn[1] = h * f(t, zn[0]) on their force paths.  zn[0] and t are
+        # only touched on accept so the evaluation is attempt-invariant,
+        # and it almost never fires: one gated cond serves both ladders
+        # instead of hoisting a rhs into every attempt
+        force_ef = jnp.logical_and(jnp.logical_and(conv, ~accepted),
+                                   nef + 1 >= MAX_NEF)
+        force_cf = (jnp.logical_and(jnp.logical_and(~conv, jcur),
+                                    ncf + 1 >= MAX_NCF_RESTART)
+                    if reuse else jnp.zeros((), bool))
+        f_restart = jax.lax.cond(
+            jnp.logical_or(force_ef, force_cf),
+            lambda: model.rhs(t0, y_ref, iinj),
+            lambda: jnp.zeros_like(y_ref))
+
         # ---- outcomes -------------------------------------------------------
         def on_conv_fail(st, ncf, nef):
             zn = st.zn                            # zn was never predicted in-place
-            zn, h = _rescale(zn, st.tau, st.h, st.q, jnp.asarray(ETACF, dtype))
+            if reuse:
+                # stale-factor retries pass through untouched (eta = 1, no
+                # counter charges) — only jbad is raised.  With fresh
+                # factors the ladder shrinks by ETACF, and because it only
+                # ever sees fresh factors at the *predictor*, several
+                # shrinks that still cannot land the corrector restart the
+                # BDF1 history outright (the netf force's twin) instead of
+                # riding the shrink to MAX_NCF — the per-iteration legacy
+                # rebuild recovers from garbage predictions on its own,
+                # this path needs the restart
+                force = jnp.logical_and(~stale, ncf + 1 >= MAX_NCF_RESTART)
+                eta = jnp.where(stale, jnp.asarray(1.0, dtype),
+                                jnp.asarray(ETACF, dtype))
+                q = jnp.where(force, jnp.ones((), jnp.int32), st.q)
+                zn, h = _rescale(zn, st.tau, st.h, q, eta)
+                zn = jnp.where(force, zn.at[1].set(h * f_restart), zn)
+                st = st._replace(zn=zn, h=h, q=q,
+                                 etamax=jnp.where(stale, st.etamax,
+                                                  jnp.asarray(1.0, dtype)),
+                                 nncf=st.nncf + jnp.where(stale, 0, 1),
+                                 jbad=jnp.ones((), bool),
+                                 nfe=st.nfe + jnp.where(force, 1, 0))
+                inc = jnp.where(stale, 0, 1)
+                return st, ncf + inc, nef
+            zn, h = _rescale(zn, st.tau, st.h, st.q,
+                             jnp.asarray(ETACF, dtype))
             st = st._replace(zn=zn, h=h, etamax=jnp.asarray(1.0, dtype),
-                             nncf=st.nncf + 1)
+                             nncf=st.nncf + 1, jbad=jnp.ones((), bool))
             return st, ncf + 1, nef
 
         def on_err_fail(st, ncf, nef):
@@ -364,10 +508,10 @@ def _step_impl(model, st: BDFState, t_limit, iinj, opts: BDFOptions,
             q = jnp.where(force, jnp.ones((), jnp.int32), st.q)
             eta = jnp.where(force, jnp.asarray(ETAMIN_EF, dtype), eta)
             zn, h = _rescale(st.zn, st.tau, st.h, q, eta)
-            # when forcing q=1, rebuild zn[1] = h * f(t, zn[0]) (CVODE's
-            # small-NEF restart): after MAX_NEF rescales the history row is
-            # no longer a valid first-derivative term, so the retry would
-            # keep solving a corrupted BDF1 equation
+            # when forcing q=1, zn[1] = h * f_restart (CVODE's small-NEF
+            # restart): after MAX_NEF rescales the history row is no longer
+            # a valid first-derivative term, so the retry would keep
+            # solving a corrupted BDF1 equation
             zn = jnp.where(force, zn.at[1].set(h * f_restart), zn)
             st = st._replace(zn=zn, h=h, q=q, etamax=jnp.asarray(1.0, dtype),
                              netf=st.netf + 1,
@@ -427,17 +571,16 @@ def _step_impl(model, st: BDFState, t_limit, iinj, opts: BDFOptions,
             zn, hnew = _rescale(zn, tau, h, qnew, eta)
             qwait = jnp.where(do_sel, qnew + 1, qwait)
 
+            # convergence-rate decay: a multi-iteration Newton whose
+            # contraction rate exceeds the CRDOWN slack flags the factors
+            # stale so the next step rebuilds (single-iteration solves keep
+            # the init crate=1 and carry no rate information)
+            jbad_next = jnp.logical_and(m_it >= 2, crate > CRDOWN)
             st = st._replace(
                 t=st.t + h, h=hnew, q=qnew, zn=zn, tau=tau, qwait=qwait,
-                etamax=jnp.asarray(ETAMX, dtype), acor_save=acor, nst=nst)
+                etamax=jnp.asarray(ETAMX, dtype), acor_save=acor, nst=nst,
+                jbad=jnp.logical_or(st.jbad, jbad_next))
             return st, ncf, nef
-
-        err_ok = dsm <= 1.0
-        accepted = jnp.logical_and(conv, err_ok)
-        if deliver is not None:
-            # deliver lanes terminate after one attempt; their step state
-            # is discarded by the caller in favour of the order-1 reset
-            accepted = jnp.logical_or(accepted, deliver)
 
         st_cf, ncf_cf, nef_cf = on_conv_fail(st, ncf, nef)
         st_ef, ncf_ef, nef_ef = on_err_fail(st, ncf, nef)
@@ -488,7 +631,8 @@ def step_or_deliver(model, st: BDFState, t_limit, w_ampa, w_gaba, deliver,
     y_ev = model.apply_event(st.zn[0], w_ampa, w_gaba)
     st_stepped, f_ev = _step_impl(model, st, t_limit, iinj, opts,
                                   deliver=deliver, y_ev=y_ev)
-    counters = (st.nst, st.nfe + 1, st.nni, st.netf, st.nncf, st.nreset + 1)
+    counters = (st.nst, st.nfe + 1, st.nni, st.netf, st.nncf, st.nreset + 1,
+                st.nsetups)
     st_del = reinit(model, st.t, y_ev, iinj, opts, counters=counters, f=f_ev)
     st_del = st_del._replace(failed=st.failed)
     return jax.tree_util.tree_map(
@@ -529,7 +673,8 @@ def deliver_event(model, st: BDFState, w_ampa, w_gaba, iinj,
     (paper §2.3: discontinuities lead to a reset of the IVP problem and
     interpolator state history)."""
     y = model.apply_event(st.zn[0], w_ampa, w_gaba)
-    counters = (st.nst, st.nfe + 1, st.nni, st.netf, st.nncf, st.nreset + 1)
+    counters = (st.nst, st.nfe + 1, st.nni, st.netf, st.nncf, st.nreset + 1,
+                st.nsetups)
     new = reinit(model, st.t, y, iinj, opts, counters=counters)
     new = new._replace(failed=st.failed)
     return new

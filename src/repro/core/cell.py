@@ -15,6 +15,13 @@ correlated mechanism that requires fully-implicit resolution (paper §2.2).
                              as the Newton matrix  M = I - gamma*J  (NEURON's
                              default preconditioner, paper §2.3)
   solve_newton_mat(y, gamma, b)   solves  (I - gamma*J~) x = b  in O(C)
+  newton_setup(y, gamma)     assembles + factors M once; returns a flat
+                             factor vector (CVODE's lsetup)
+  newton_solve(factors, b)   back-solves against stored factors in two
+                             O(C) sweeps (CVODE's lsolve) — the pair
+                             composes to solve_newton_mat, letting the
+                             integrator reuse one setup across Newton
+                             iterations and accepted steps
 """
 from __future__ import annotations
 
@@ -26,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mechanisms as mech
-from repro.core.hines import hines_assemble, hines_solve
+from repro.core.hines import (hines_assemble, hines_factor, hines_solve,
+                              hines_solve_factored)
 from repro.core.morphology import Morphology
 
 
@@ -208,6 +216,98 @@ class CellModel:
                 gamma * Jmv * xv / den_m, gamma * Jhv * xv / den_h,
                 gamma * Jnv * xv / den_n])
             xr = xr.at[: 3 * C].add(gate_corr)
+        return jnp.concatenate([xv, xr])
+
+    # ---- split setup/solve (factor reuse across Newton iterations) ---------------
+    def n_factors(self, mode: str = "neuron") -> int:
+        """Length of the flat factor vector returned by ``newton_setup``.
+
+        Flat (not a nested pytree) so it rides ``BDFState`` as one plain
+        array leaf: checkpointing, lane gather/scatter and SPMD sharding
+        treat it like any other per-neuron state row.
+        """
+        base = self.n_state + self.C          # d_elim | vscale | rest_den
+        return base + 6 * self.C + 2 if mode == "schur" else base
+
+    def newton_setup(self, y, gamma, mode: str = "neuron"):
+        """Assemble and factor M = I - gamma*J~ at (y, gamma); flat f64 vector.
+
+        Layout: ``[d_elim(C) | vscale(C) | rest_den(n_state-C)]`` plus, in
+        schur mode, the rhs-folding and gate-correction coefficient rows
+        ``[Jvm/den_m, Jvh/den_h, Jvn/den_n, g*Jmv/den_m, g*Jhv/den_h,
+        g*Jnv/den_n (C each) | syn folds (2)]``.  Everything downstream of
+        (y, gamma) is precomputed, so ``newton_solve`` needs no rhs
+        evaluation, no rate derivatives, and no elimination sweep.
+        """
+        C = self.C
+        g_tot, diag_gates, diag_syn, diag_extra = self.jac_terms(y)
+        p = self.params
+        vscale = p.cap / gamma
+        diag_v = vscale + g_tot
+        parts = []
+
+        if mode == "schur":
+            v, m, h, n, g_ampa, g_gaba, extra = self.split(y)
+            f = mech.S_PER_CM2_TO_US_PER_UM2 * p.area
+            Jvm = -(mech.GNABAR * f * 3.0 * m ** 2 * h) * (v - mech.ENA)
+            Jvh = -(mech.GNABAR * f * m ** 3) * (v - mech.ENA)
+            Jvn = -(mech.GKBAR * f * 4.0 * n ** 3) * (v - mech.EK)
+            _, (Jmv, Jhv, Jnv) = jax.jvp(
+                lambda vv: mech.gate_derivs(vv, m, h, n), (v,),
+                (jnp.ones_like(v),))
+            dm, dh, dn = (diag_gates[:C], diag_gates[C:2 * C],
+                          diag_gates[2 * C:3 * C])
+            den_m, den_h, den_n = (1.0 - gamma * dm, 1.0 - gamma * dh,
+                                   1.0 - gamma * dn)
+            diag_v = diag_v - gamma * (Jvm * Jmv / den_m + Jvh * Jhv / den_h
+                                       + Jvn * Jnv / den_n)
+            den_ga = 1.0 + gamma / mech.TAU_AMPA
+            den_gb = 1.0 + gamma / mech.TAU_GABA
+            parts = [Jvm / den_m, Jvh / den_h, Jvn / den_n,
+                     gamma * Jmv / den_m, gamma * Jhv / den_h,
+                     gamma * Jnv / den_n,
+                     jnp.stack([(v[0] - mech.E_AMPA) / den_ga,
+                                (v[0] - mech.E_GABA) / den_gb])]
+
+        d = hines_assemble(p.parent, p.g_axial, diag_v)
+        d_elim = hines_factor(p.parent, p.g_axial, d)
+        rest_diag = jnp.concatenate([diag_gates, diag_syn, diag_extra])
+        rest_den = 1.0 - gamma * rest_diag
+        return jnp.concatenate([d_elim, vscale, rest_den] + parts)
+
+    def newton_solve(self, factors, b, mode: str = "neuron"):
+        """Solve (I - gamma*J~) x = b against stored ``newton_setup`` factors.
+
+        Two O(C) Hines sweeps plus elementwise work — no assembly, no
+        elimination, no rate evaluation.  Composes with ``newton_setup``
+        to the same solution as ``solve_newton_mat`` (to rounding: the
+        cached reciprocal groupings reassociate a few products).
+        """
+        C = self.C
+        p = self.params
+        d_elim = factors[:C]
+        vscale = factors[C:2 * C]
+        rest_den = factors[2 * C:C + self.n_state]
+        bv = b[:C] * vscale
+
+        if mode == "schur":
+            o = C + self.n_state
+            fm, fh, fn = (factors[o:o + C], factors[o + C:o + 2 * C],
+                          factors[o + 2 * C:o + 3 * C])
+            gm, gh, gn = (factors[o + 3 * C:o + 4 * C],
+                          factors[o + 4 * C:o + 5 * C],
+                          factors[o + 5 * C:o + 6 * C])
+            sa, sg = factors[o + 6 * C], factors[o + 6 * C + 1]
+            bm, bh, bn = b[C:2 * C], b[2 * C:3 * C], b[3 * C:4 * C]
+            bv = bv + fm * bm + fh * bh + fn * bn
+            bv = bv.at[0].add(-sa * b[self.idx_g_ampa]
+                              - sg * b[self.idx_g_gaba])
+
+        xv = hines_solve_factored(p.parent, p.g_axial, d_elim, bv)
+        xr = b[C:] / rest_den
+        if mode == "schur":
+            gate_corr = jnp.concatenate([gm * xv, gh * xv, gn * xv])
+            xr = xr.at[:3 * C].add(gate_corr)
         return jnp.concatenate([xv, xr])
 
     # ---- events ------------------------------------------------------------------

@@ -44,6 +44,10 @@ class RunResult(NamedTuple):
     comm: object = None        # transport telemetry dict (run_fap_spmd:
                                # realized parcel bytes / class counts;
                                # None on single-host runners)
+    solver: object = None      # solver telemetry dict summed over lanes
+                               # (vardt runners: nst/nni/nfe/nsetups/netf/
+                               # nncf — nsetups/nni is the Jacobian-reuse
+                               # ratio of the freshness policy)
 
 
 def make_bsp_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
@@ -276,7 +280,8 @@ def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
              xc.SchedStats.zeros()),
             jnp.arange(n_windows))
         return RunResult(rec, sts.nst.sum(), n_ev, n_rs, eq.dropped,
-                         sts.failed.any(), sts.zn[:, 0], stats)
+                         sts.failed.any(), sts.zn[:, 0], stats,
+                         solver=xc.solver_stats(sts))
 
     return run
 

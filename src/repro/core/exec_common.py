@@ -261,6 +261,35 @@ def auto_batch_cap(stats: SchedStats, n: int, *, slack: float = 2.0,
     return min(n, 1 << max(0, int(np.ceil(np.log2(want)))))
 
 
+def solver_stats(sts) -> dict:
+    """Summed per-lane BDF counters for ``RunResult.solver`` (jit-safe:
+    a dict of scalar arrays).  ``nsetups / nni`` is the Jacobian-reuse
+    ratio of the freshness policy (1.0 on the legacy
+    ``jac_policy="iteration"`` path, well under 0.5 under reuse)."""
+    return {"nst": sts.nst.sum(), "nni": sts.nni.sum(),
+            "nfe": sts.nfe.sum(), "nsetups": sts.nsetups.sum(),
+            "netf": sts.netf.sum(), "nncf": sts.nncf.sum(),
+            "nreset": sts.nreset.sum()}
+
+
+def auto_spike_cap(rec, stats: SchedStats, n: int, *, slack: float = 4.0,
+                   floor: int = 16) -> int:
+    """Pick a ``spike_cap`` from measured spike-rate telemetry (the
+    ``RunResult.rec`` / ``.sched`` of a probe run), mirroring
+    ``auto_batch_cap``: mean spikes per scheduler round times ``slack``
+    headroom, rounded up to a power of two, clipped to [floor, n].
+
+    Spiking is burstier than the runnable frontier, hence the larger
+    default slack — and undershooting is safe either way: a round with
+    more than ``spike_cap`` spikes falls back to the dense fan-out branch
+    (identical events, never a drop), it just stops being compact.
+    """
+    rounds = max(1, int(stats.rounds))
+    mean_spikes = float(np.asarray(rec.count).sum()) / rounds
+    want = max(float(floor), slack * mean_spikes)
+    return min(n, 1 << max(0, int(np.ceil(np.log2(want)))))
+
+
 def compact_frontier(runnable, t_clock, cap: int, n_iters: int = 48):
     """Select + compact the runnable frontier into a [cap] gather-id batch.
 

@@ -170,6 +170,10 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                   never a drop).  spike_cap <= 0 defaults to the batch
                   cap under batch="compact" (stepped lanes bound spikes,
                   so the fallback never fires) and min(N, 256) otherwise.
+                  spike_cap="auto" sizes the cap from the probe run's
+                  spike-rate telemetry (``exec_common.auto_spike_cap``;
+                  exposed as ``run.spike_cap``) — the probe is shared
+                  with batch_cap="auto" when both are requested.
 
     The returned nullary runner also exposes ``run.init_carry`` /
     ``run.round_body`` / ``run.cond`` so benchmarks can drive and time
@@ -178,14 +182,19 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
     n = net.n
     if batch not in ("dense", "compact"):
         raise ValueError(f"unknown batch mode {batch!r}")
-    if batch_cap == "auto":
+    if batch_cap == "auto" or spike_cap == "auto":
+        # one dense probe run serves both auto caps
         probe = make_fap_vardt_runner(
             model, net, iinj, min(t_end, probe_t), opts=opts,
             eg_window=eg_window, horizon_cap=horizon_cap,
             k_select=k_select, step_budget=step_budget, ev_cap=ev_cap,
             max_rounds=max_rounds, queue=queue, wheel=wheel, select=select,
             horizon_impl=horizon_impl, n_bisect=n_bisect)
-        batch_cap = xc.auto_batch_cap(probe()[0].sched, n)
+        pres, _ = probe()
+        if batch_cap == "auto":
+            batch_cap = xc.auto_batch_cap(pres.sched, n)
+        if spike_cap == "auto":
+            spike_cap = xc.auto_spike_cap(pres.rec, pres.sched, n)
     cap = n if batch_cap <= 0 else min(int(batch_cap), n)
     s_cap = spike_cap if spike_cap > 0 else \
         (cap if batch == "compact" else min(n, 256))
@@ -335,7 +344,8 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
         else:
             sts, eq, rec, n_ev, n_rs, stats, rounds = out
         return RunResult(rec, sts.nst.sum(), n_ev, n_rs, eq.dropped,
-                         sts.failed.any(), sts.zn[:, 0], stats), rounds
+                         sts.failed.any(), sts.zn[:, 0], stats,
+                         solver=xc.solver_stats(sts)), rounds
 
     def run():
         return _run()

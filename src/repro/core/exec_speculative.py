@@ -25,6 +25,15 @@ non-speculative method); active networks pay only discarded local work.
 Spike trains are bit-identical to the non-speculative method whenever
 speculation is validated, and equal up to integrator tolerance otherwise
 (tests/test_speculative.py).
+
+Speculation composes with the Newton factor cache for free: the cached
+factors, freshness counters and ``gamma_saved`` live in ``BDFState``, so
+the snapshot/restore pytree carries them like any other solver state.
+Speculative steps ride whatever factors the conservative phase left
+behind (stale factors stay valid — the freshness policy rebuilds on
+gamma drift or convergence decay exactly as in validated stepping), and
+a backstep restores the snapshot's factors without any extra setup:
+discarded speculation never forces a Jacobian rebuild.
 """
 from __future__ import annotations
 
@@ -149,7 +158,8 @@ def make_spec_runner(model: CellModel, net: Network, iinj, t_end: float,
         (sts, snap, _, _, _, eq, rec, n_ev, n_rs, stats, rounds) = \
             jax.lax.while_loop(cond, round_body, carry)
         res = RunResult(rec, snap.nst.sum(), n_ev, n_rs, eq.dropped,
-                        sts.failed.any(), snap.zn[:, 0])
+                        sts.failed.any(), snap.zn[:, 0],
+                        solver=xc.solver_stats(snap))
         return res, stats, rounds
 
     return run

@@ -59,6 +59,58 @@ def hines_solve(parent, g_axial, d, b):
     return v
 
 
+def hines_factor(parent, g_axial, d):
+    """Forward-eliminate the assembled diagonal; returns ``d_elim``.
+
+    The elimination sweep of :func:`hines_solve` updates the diagonal
+    independently of the right-hand side (children carry higher indices,
+    so ``dd[idx]`` is final when row ``idx`` is eliminated).  That makes
+    the eliminated diagonal an LU-style factorization of the tree matrix:
+    together with ``g_axial`` it determines the multipliers
+    ``f[i] = g_axial[i] / d_elim[i]``, so repeated solves against the
+    same ``(d, g_axial)`` reuse this factor via
+    :func:`hines_solve_factored` at two O(C) sweeps with no elimination.
+    """
+    C = d.shape[0]
+
+    def elim(i, dd):
+        idx = C - 1 - i                       # C-1 .. 1
+        p = parent[idx]
+        f = g_axial[idx] / dd[idx]
+        return dd.at[p].add(-f * g_axial[idx])
+
+    return jax.lax.fori_loop(0, C - 1, elim, d)
+
+
+def hines_solve_factored(parent, g_axial, d_elim, b):
+    """Solve ``(D - A) v = b`` from a stored :func:`hines_factor` result.
+
+    Two O(C) sweeps: forward-substitute b with the cached multipliers,
+    then back-substitute against the eliminated diagonal.  The value
+    sequence matches :func:`hines_solve` operation for operation, so a
+    factored solve equals the fused solve bit for bit.
+    """
+    C = d_elim.shape[0]
+
+    def fwd(i, bb):
+        idx = C - 1 - i                       # C-1 .. 1
+        p = parent[idx]
+        f = g_axial[idx] / d_elim[idx]
+        return bb.at[p].add(f * bb[idx])
+
+    b = jax.lax.fori_loop(0, C - 1, fwd, b)
+
+    v0 = b[0] / d_elim[0]
+    v = jnp.zeros_like(b).at[0].set(v0)
+
+    def subst(i, v):
+        p = parent[i]
+        vi = (b[i] + g_axial[i] * v[p]) / d_elim[i]
+        return v.at[i].set(vi)
+
+    return jax.lax.fori_loop(1, C, subst, v)
+
+
 def dense_tree_matrix(parent, g_axial, diag_extra):
     """Materialise the full dense matrix (test oracle only)."""
     C = diag_extra.shape[0]

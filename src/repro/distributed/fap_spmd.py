@@ -521,7 +521,8 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
                     jnp.asarray(n_rs, jnp.int32),
                     jnp.asarray(n_drop, jnp.int32), sts.failed.any(),
                     sts.zn[:, 0],
-                    comm={"parcel_bytes": p_bytes, "rounds": rounds})
+                    comm={"parcel_bytes": p_bytes, "rounds": rounds},
+                    solver=xc.solver_stats(sts))
     if pl is not None:
         res = plc.unpermute_result(res, pl)
     return res, rounds

@@ -169,7 +169,7 @@ def compact_gather(mask, table, cap: int, *, fill: int = None,
 
 
 def segment_rank(key, n_keys: int, max_rank: int, *, impl: str = "auto",
-                 block_e: int = 512):
+                 block_e: int = 512, domain: str = "global"):
     """Rank of each event within its key group, in event-index order —
     the wheel's generic-insert slot ranking, dispatched (the ROADMAP
     follow-up from PR 1).
@@ -181,11 +181,31 @@ def segment_rank(key, n_keys: int, max_rank: int, *, impl: str = "auto",
     on all events with key < n_keys (invalid events differ: the scatter
     path parks them at ``max_rank``, the pairwise path ranks them among
     themselves — both are masked out by the insert's validity test).
+
+    ``domain="batch"`` (the PR 5 follow-up) remaps the keys of a small
+    batch to the dense [E] event domain before the scatter ranking: each
+    valid event's key becomes the index of its group's first occurrence
+    (a pairwise [E, E] first-occurrence argmax), so the per-round key
+    table shrinks from O(n_keys + 1) = O(N*B) to O(E + 1) — the compact
+    fan-out's cap-bounded edge batches stop allocating an N-proportional
+    table per call off-TPU.  The remap is a bijection on key groups, so
+    valid-event ranks are identical to the global domain; invalid events
+    park at the E sentinel (rank ``max_rank``), as before.  The pallas
+    path is already N-free and ignores the domain.
     """
     if impl == "auto":
         impl = "scatter" if use_interpret() else "pallas"
+    if domain not in ("global", "batch"):
+        raise ValueError(f"unknown segment_rank domain {domain!r}")
     if impl == "scatter":
         from repro.sched import wheel as wh
+        if domain == "batch":
+            (E,) = key.shape
+            valid = key < n_keys
+            same = key[:, None] == key[None, :]
+            rep = jnp.argmax(same, axis=1).astype(key.dtype)
+            key2 = jnp.where(valid, rep, E)
+            return wh.segment_rank(key2, E, max_rank)
         return wh.segment_rank(key, n_keys, max_rank)
     if impl != "pallas":
         raise ValueError(f"unknown segment_rank impl {impl!r}")

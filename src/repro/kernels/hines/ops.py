@@ -1,4 +1,10 @@
-"""Public jit'd wrapper for the batched Hines solve Pallas kernel."""
+"""Public jit'd wrappers for the batched Hines Pallas kernels.
+
+``hines_solve_batched`` is the original fused eliminate-and-solve pass;
+``hines_factor_batched`` / ``hines_solve_factored_batched`` are its split
+setup/solve halves (the reuse-don't-rebuild Newton: factor once per
+setup, solve every iteration against the stored eliminated diagonal).
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,7 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import use_interpret
-from repro.kernels.hines.hines import BN_DEFAULT, hines_solve_pallas
+from repro.kernels.hines.hines import (BN_DEFAULT, hines_factor_pallas,
+                                       hines_solve_factored_pallas,
+                                       hines_solve_pallas)
 
 
 @partial(jax.jit, static_argnames=("block_n",))
@@ -24,4 +32,41 @@ def hines_solve_batched(parent, g_axial, d, b, block_n: int = BN_DEFAULT):
         b = jnp.concatenate([b, jnp.zeros((C, n_pad), b.dtype)], axis=1)
     x = hines_solve_pallas(parent, g_axial.astype(d.dtype), d, b,
                            block_n=block_n, interpret=use_interpret())
+    return x[:, :N]
+
+
+@partial(jax.jit, static_argnames=("block_n",))
+def hines_factor_batched(parent, g_axial, d, block_n: int = BN_DEFAULT):
+    """Batched diagonal elimination with automatic lane padding.
+
+    parent: i32[C]; g_axial: [C]; d: [C, N] -> d_elim: [C, N].
+    Padding columns use the identity diagonal (d=1) so they are inert.
+    """
+    C, N = d.shape
+    n_pad = (-N) % block_n
+    if n_pad:
+        d = jnp.concatenate([d, jnp.ones((C, n_pad), d.dtype)], axis=1)
+    de = hines_factor_pallas(parent, g_axial.astype(d.dtype), d,
+                             block_n=block_n, interpret=use_interpret())
+    return de[:, :N]
+
+
+@partial(jax.jit, static_argnames=("block_n",))
+def hines_solve_factored_batched(parent, g_axial, d_elim, b,
+                                 block_n: int = BN_DEFAULT):
+    """Batched factored solve with automatic lane padding.
+
+    parent: i32[C]; g_axial: [C]; d_elim, b: [C, N] -> x: [C, N].
+    Composes with ``hines_factor_batched`` to reproduce
+    ``hines_solve_batched`` bitwise (identical FP op sequence on b).
+    """
+    C, N = d_elim.shape
+    n_pad = (-N) % block_n
+    if n_pad:
+        d_elim = jnp.concatenate([d_elim, jnp.ones((C, n_pad), d_elim.dtype)],
+                                 axis=1)
+        b = jnp.concatenate([b, jnp.zeros((C, n_pad), b.dtype)], axis=1)
+    x = hines_solve_factored_pallas(parent, g_axial.astype(d_elim.dtype),
+                                    d_elim, b, block_n=block_n,
+                                    interpret=use_interpret())
     return x[:, :N]

@@ -1,10 +1,10 @@
-"""Pure-jnp oracle for the batched Hines solve kernel."""
+"""Pure-jnp oracles for the batched Hines solve/factor kernels."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.hines import hines_solve
+from repro.core.hines import hines_factor, hines_solve, hines_solve_factored
 
 
 def hines_solve_ref(parent, g_axial, d, b):
@@ -12,6 +12,20 @@ def hines_solve_ref(parent, g_axial, d, b):
     sol = jax.vmap(lambda dd, bb: hines_solve(parent, g_axial, dd, bb),
                    in_axes=(1, 1), out_axes=1)
     return sol(d, b)
+
+
+def hines_factor_ref(parent, g_axial, d):
+    """d: [C, N] -> d_elim: [C, N]; vmap of the O(C) reference factor."""
+    fac = jax.vmap(lambda dd: hines_factor(parent, g_axial, dd),
+                   in_axes=1, out_axes=1)
+    return fac(d)
+
+
+def hines_solve_factored_ref(parent, g_axial, d_elim, b):
+    """d_elim, b: [C, N] -> x: [C, N]; vmap of the factored solver."""
+    sol = jax.vmap(lambda dd, bb: hines_solve_factored(parent, g_axial, dd, bb),
+                   in_axes=(1, 1), out_axes=1)
+    return sol(d_elim, b)
 
 
 def dense_solve_ref(parent, g_axial, d, b):

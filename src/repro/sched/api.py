@@ -55,15 +55,18 @@ def get_queue_ops(queue: str = "dense", *, ev_cap: int = 64,
     if queue == "wheel":
         # the wheel's generic insert doubles as the batch insert: no slot
         # argsort anywhere, and on TPU the pairwise rank kernel is N-free.
-        # Off-TPU the scatter-min ranking still allocates its O(N*B) key
-        # table per call (cheap memsets, but not strictly flat — see the
-        # ROADMAP follow-up on batch-domain rank remapping)
+        # The batch insert ranks in the dense [E] batch domain, so the
+        # off-TPU scatter-min ranking allocates an O(E) key table for the
+        # cap-bounded edge batches instead of the O(N*B) global table
+        # (the full-E generic insert keeps the global domain: there
+        # E ~ N*k and the remap's pairwise [E, E] compare would dominate).
         return QueueOps(
             name="wheel", capacity=wheel.capacity,
             make=lambda n: wh.make_wheel(n, wheel),
             insert=functools.partial(wh.insert, wheel),
             insert_grouped=functools.partial(wh.insert_grouped, wheel),
-            insert_batch=functools.partial(wh.insert, wheel),
+            insert_batch=functools.partial(wh.insert, wheel,
+                                           rank_domain="batch"),
             next_time=wh.next_time,
             deliver_until=wh.deliver_until,
             wrap=WheelQueue,

@@ -160,7 +160,7 @@ def _place(spec: WheelSpec, free_rows, rank, valid):
 
 def insert(spec: WheelSpec, eq: WheelQueue, target, t_ev, w_ampa, w_gaba,
            valid, rank: Optional[jnp.ndarray] = None,
-           rank_impl: str = "auto") -> WheelQueue:
+           rank_impl: str = "auto", rank_domain: str = "global") -> WheelQueue:
     """Drop-in generic insert (same signature as ``events.insert``): E
     candidate events to arbitrary targets, O(E) scatters, no sort.
 
@@ -169,6 +169,9 @@ def insert(spec: WheelSpec, eq: WheelQueue, target, t_ev, w_ampa, w_gaba,
     ``kernels.event_wheel.ops.segment_rank`` — the pairwise Pallas tile
     kernel on real TPU (one VMEM pass, no per-round key table), the
     iterative scatter-min elsewhere (``rank_impl`` forces either).
+    ``rank_domain="batch"`` tells the scatter ranking that E is small
+    (a cap-bounded spike batch): keys are remapped to the dense [E]
+    domain first so the per-round key table is O(E), not O(N*B).
     """
     n, cap = eq.t.shape
     B, S = spec.n_buckets, spec.bucket_slots
@@ -177,7 +180,8 @@ def insert(spec: WheelSpec, eq: WheelQueue, target, t_ev, w_ampa, w_gaba,
     key = jnp.where(valid, target * B + bucket, n * B)
     if rank is None:
         from repro.kernels.event_wheel import ops as ew_ops
-        rank = ew_ops.segment_rank(key, n * B, S, impl=rank_impl)
+        rank = ew_ops.segment_rank(key, n * B, S, impl=rank_impl,
+                                   domain=rank_domain)
     tgt_c = jnp.clip(tgt, 0, n - 1)
     free = jnp.isinf(eq.t).reshape(n, B, S)
     free_rows = free[tgt_c, bucket]                          # [E, S]

@@ -65,8 +65,16 @@ def test_quiet_neuron_giant_steps(soma_model):
 def test_order_adapts_above_one(soma_model):
     opts = bdf.BDFOptions(atol=1e-3)
     st = bdf.reinit(soma_model, 0.0, soma_model.init_state(), 0.0, opts)
-    st = jax.jit(lambda s: bdf.advance_to(soma_model, s, 50.0, 0.0, opts))(st)
-    assert int(st.q) >= 2                          # variable-ORDER engaged
+    stepper = jax.jit(lambda s: bdf.step(soma_model, s, 50.0, 0.0, opts))
+    q_max = 1
+    for _ in range(200):
+        st = stepper(st)
+        q_max = max(q_max, int(st.q))
+        if float(st.t) >= 50.0 - 1e-9:
+            break
+    # variable-ORDER engaged (the final tstop-clamped step may legitimately
+    # drop back to 1, so the peak order is the robust observable)
+    assert q_max >= 2
 
 
 def test_tstop_never_overstepped(soma_model):
@@ -167,9 +175,15 @@ def test_error_fail_q_force_rebuilds_zn1(soma_model):
     """Regression (ISSUE 4 satellite): when MAX_NEF error-test failures
     force q -> 1, ``on_err_fail`` must rebuild zn[1] = h * f(t, zn[0]) as
     CVODE does — before the fix the retry kept solving a corrupted BDF1
-    history and gave up (``failed=True``) on exactly this scenario."""
+    history and gave up (``failed=True``) on exactly this scenario.
+
+    Pinned to the legacy ``jac_policy="iteration"`` path: under the reuse
+    policy the stale-factor Newton refuses to converge on the garbage
+    prediction, so recovery runs through h-shrinking convergence retries
+    and the netf force may never fire (see
+    ``test_reuse_policy_recovers_from_corrupted_history``)."""
     model = soma_model
-    opts = bdf.BDFOptions()
+    opts = bdf.BDFOptions(jac_policy="iteration")
     st = bdf.reinit(model, 0.0, model.init_state(-65.0), 0.1, opts)
     for _ in range(8):
         st = bdf.step(model, st, 2.0, 0.1, opts)
@@ -190,6 +204,28 @@ def test_error_fail_q_force_rebuilds_zn1(soma_model):
     assert abs(float(st2.zn[0][model.idx_vsoma]) - ref_v) < 1e-6
 
     # a subsequent normal advance from the recovered state stays healthy
+    st3 = bdf.advance_to(model, st2, float(st2.t) + 1.0, 0.1, opts)
+    assert not bool(st3.failed)
+    assert np.all(np.isfinite(np.asarray(st3.zn[0])))
+
+
+def test_reuse_policy_recovers_from_corrupted_history(soma_model):
+    """The freshness policy's counterpart of the force-path regression:
+    from the same corrupted Nordsieck history, the stale-factor retry /
+    convergence-failure ladder must still recover an accurate accepted
+    step (possibly without any error-test failure at all: the stale
+    Newton simply refuses to converge on garbage until h collapses)."""
+    model = soma_model
+    opts = bdf.BDFOptions()
+    st = bdf.reinit(model, 0.0, model.init_state(-65.0), 0.1, opts)
+    for _ in range(8):
+        st = bdf.step(model, st, 2.0, 0.1, opts)
+    st_bad = st._replace(zn=st.zn.at[1:].multiply(1e9))
+    st2 = bdf.step(model, st_bad, float(st.t) + 0.5, 0.1, opts)
+    assert not bool(st2.failed)
+    ref = bdf.advance_to(model, st, float(st2.t) + 1e-12, 0.1, opts)
+    ref_v = float(bdf.interpolate(ref, st2.t)[model.idx_vsoma])
+    assert abs(float(st2.zn[0][model.idx_vsoma]) - ref_v) < 1e-6
     st3 = bdf.advance_to(model, st2, float(st2.t) + 1.0, 0.1, opts)
     assert not bool(st3.failed)
     assert np.all(np.isfinite(np.asarray(st3.zn[0])))
