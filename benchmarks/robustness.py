@@ -1,0 +1,131 @@
+"""Preemption-tolerance overhead + kill/resume identity smoke (ISSUE 9).
+
+Two axes:
+
+  robustness/ckpt_*      round-boundary SimCarry checkpoint cost on the
+                         single-host FAP vardt runner: save + restore
+                         wall time for one snapshot, and the end-to-end
+                         overhead of driving the run host-stepped with
+                         checkpoint_every=k vs the uninterrupted
+                         host-stepped run (the fair baseline — the
+                         jitted while_loop path has no save hook).
+  robustness/resume_*    the CI acceptance smoke: kill the checkpointed
+                         run via SimulatedFailure mid-way, resume from
+                         the latest snapshot, and ASSERT the spike train
+                         is bit-identical to the uninterrupted run and
+                         the poisoned-lane watchdog rolls back to an
+                         identical completion (detected, never silent).
+
+Quick mode (REPRO_BENCH_QUICK=1) trims the network and horizon so the
+whole suite is a few host-stepped runs — cheap enough for check.sh.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import dump_json, emit, soma_model
+from repro.checkpoint import FaultPlan, SimulatedFailure
+from repro.core import exec_common as xc
+from repro.core import exec_fap, network
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK") == "1"
+
+
+def run():
+    n = 32 if QUICK else 128
+    t_end = 10.0 if QUICK else 25.0
+    model = soma_model()
+    net = network.make_network(n, k_in=4, seed=3)
+    rng = np.random.default_rng(1)
+    iinj = 0.16 + 0.004 * rng.standard_normal(n)
+    runner = exec_fap.make_fap_vardt_runner(model, net, iinj, t_end)
+
+    # --- uninterrupted host-stepped baseline ------------------------------
+    runner(watchdog=True)                      # warm: compile the round
+    t0 = time.perf_counter()
+    res0, rounds0 = runner(watchdog=True)
+    base_s = time.perf_counter() - t0
+    rounds0 = int(rounds0)
+    assert not bool(res0.failed) and int(res0.dropped) == 0
+    times0 = np.asarray(res0.rec.times)
+    count0 = np.asarray(res0.rec.count)
+
+    # --- one snapshot save + restore cost --------------------------------
+    sc = runner.pack(runner.init_carry())
+    d = tempfile.mkdtemp()
+    try:
+        t0 = time.perf_counter()
+        xc.save_sim_checkpoint(d, 1, sc)
+        save_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sc2, _, skipped = xc.restore_sim_checkpoint(d, 1, sc)
+        restore_s = time.perf_counter() - t0
+        assert skipped == []
+        nbytes = sum(np.asarray(x).nbytes
+                     for x in __import__("jax").tree_util.tree_leaves(sc))
+        emit("robustness/ckpt_save", save_s * 1e6,
+             f"n={n} simcarry={nbytes / 1e6:.2f}MB")
+        emit("robustness/ckpt_restore", restore_s * 1e6,
+             f"n={n} crc32-verified")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    # --- end-to-end overhead of checkpoint_every=k ------------------------
+    every = max(2, rounds0 // 8)
+    d = tempfile.mkdtemp()
+    try:
+        t0 = time.perf_counter()
+        res1, rounds1 = runner(checkpoint_every=every, ckpt_dir=d)
+        ck_s = time.perf_counter() - t0
+        saved = res1.health["checkpoints_saved"]
+        assert saved >= 2
+        emit("robustness/ckpt_run_overhead", (ck_s - base_s) / max(1, saved)
+             * 1e6, f"per-save amortized, every={every} saves={saved} "
+             f"baseline={base_s:.2f}s")
+        # --- kill mid-run, resume: bit-identical (the CI acceptance) -----
+        try:
+            runner(checkpoint_every=every, ckpt_dir=d,
+                   fault=FaultPlan(fail_at_round=max(1, rounds0 // 2)))
+            raise AssertionError("SimulatedFailure did not fire")
+        except SimulatedFailure:
+            pass
+        t0 = time.perf_counter()
+        res2, rounds2 = runner(checkpoint_every=every, ckpt_dir=d,
+                               resume=True)
+        resume_s = time.perf_counter() - t0
+        assert np.array_equal(times0, np.asarray(res2.rec.times))
+        assert np.array_equal(count0, np.asarray(res2.rec.count))
+        assert int(rounds2) == rounds0
+        emit("robustness/resume_kill", resume_s * 1e6,
+             f"bit-identical from round {res2.health['resumed_from']}"
+             f"/{rounds0}")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    # --- watchdog: poisoned lane -> rollback -> identical completion ------
+    d = tempfile.mkdtemp()
+    try:
+        t0 = time.perf_counter()
+        res3, _ = runner(checkpoint_every=every, ckpt_dir=d,
+                         fault=FaultPlan(poison_at_round=max(1, rounds0 // 3),
+                                         poison_lane=1))
+        poison_s = time.perf_counter() - t0
+        assert res3.health["nonfinite_rounds"] >= 1
+        assert res3.health["rollbacks"] >= 1
+        assert not bool(res3.failed)
+        assert np.array_equal(times0, np.asarray(res3.rec.times))
+        emit("robustness/resume_poison_rollback", poison_s * 1e6,
+             f"rollbacks={res3.health['rollbacks']} bit-identical")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    dump_json("robustness")
+
+
+if __name__ == "__main__":
+    run()

@@ -45,4 +45,11 @@ echo "== solver stepping smoke (reuse-don't-rebuild Newton + NDF) =="
 # linear algebra beats the per-iteration rebuild by >= 1.3x on CPU
 REPRO_BENCH_QUICK=1 python -c "from benchmarks import solver; solver.run()"
 
+echo "== kill-resume smoke (checkpoint -> SimulatedFailure -> resume) =="
+# asserts the resumed FAP run's spike train is bit-identical to the
+# uninterrupted run and the poisoned-lane watchdog rolls back to an
+# identical completion (detected, never silent); checkpoint dirs live in
+# tmpdirs the suite removes itself, so the gate stays hermetic
+REPRO_BENCH_QUICK=1 python -c "from benchmarks import robustness; robustness.run()"
+
 echo "check.sh: all green"

@@ -1,3 +1,6 @@
-from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,  # noqa: F401
-                                         save_checkpoint)
-from repro.checkpoint.fault_tolerance import RestartManager, StragglerMonitor  # noqa: F401
+from repro.checkpoint.checkpoint import (gc_incomplete, latest_step,  # noqa: F401
+                                         prune_checkpoints,
+                                         restore_checkpoint, save_checkpoint)
+from repro.checkpoint.fault_tolerance import (FaultPlan, RestartManager,  # noqa: F401
+                                              SimulatedFailure,
+                                              StragglerMonitor)

@@ -3,7 +3,7 @@
 Layout of one checkpoint::
 
     <dir>/step_000123/
-        manifest.json      # tree structure, shapes, dtypes, sizes, extras
+        manifest.json      # tree structure, shapes, dtypes, sizes, crc32s
         arr_00000.npy ...  # one file per leaf (host-local full array here;
                            # in a multi-host deployment each host writes its
                            # process-local shards — path layout is identical)
@@ -12,16 +12,30 @@ Atomicity: everything is written into ``step_X.tmp`` and renamed once the
 manifest (written LAST) is on disk — a crashed save can never be mistaken
 for a complete checkpoint.  ``restore_checkpoint`` optionally reshards onto
 a different mesh (elastic resume, DESIGN.md §6).
+
+Integrity is verified on restore, never assumed: every leaf carries a
+crc32 of its bytes in the manifest (bit rot and truncated writes fail
+loudly), and the stored pytree structure string must match the restore
+target's (a mismatched treedef would otherwise restore leaf-by-leaf into
+the wrong structure).  Directory handling is crash-robust: stray entries
+that are not ``step_NNNNNNNN`` checkpoints are ignored rather than
+tripping the step parser, and orphaned ``*.tmp`` dirs left by a crashed
+save are garbage-collected (the atomic rename means any ``.tmp`` entry is
+garbage by construction — single-writer-per-directory assumed).
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
 
 
 def _flatten(tree):
@@ -29,10 +43,40 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _step_of(name: str) -> Optional[int]:
+    """Step number of a checkpoint dir entry; None for anything that is
+    not a complete ``step_NNNNNNNN`` name (stray files, ``.tmp`` dirs,
+    hand-made ``step_old`` backups, ...)."""
+    m = _STEP_RE.match(name)
+    return int(m.group(1)) if m else None
+
+
+def gc_incomplete(ckpt_dir: str) -> list:
+    """Remove orphaned ``*.tmp`` dirs left behind by a crashed save.
+
+    The atomic-commit protocol renames ``step_X.tmp`` -> ``step_X`` only
+    after the manifest is fsynced, so any surviving ``.tmp`` entry is an
+    incomplete save and can never be a restore target.  Returns the
+    removed names (detected, never silent)."""
+    removed = []
+    if not os.path.isdir(ckpt_dir):
+        return removed
+    for name in os.listdir(ckpt_dir):
+        full = os.path.join(ckpt_dir, name)
+        if name.endswith(".tmp") and os.path.isdir(full):
+            shutil.rmtree(full, ignore_errors=True)
+            removed.append(name)
+    return removed
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
                     extras: Optional[dict] = None) -> str:
     """tree: pytree of arrays (params, opt state, ...); extras: JSON-ables."""
-    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    final = step_path(ckpt_dir, step)
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
@@ -44,7 +88,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
         fname = f"arr_{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
         entries.append({"file": fname, "shape": list(arr.shape),
-                        "dtype": str(arr.dtype), "bytes": int(arr.nbytes)})
+                        "dtype": str(arr.dtype), "bytes": int(arr.nbytes),
+                        "crc32": int(zlib.crc32(arr.tobytes()))})
     manifest = {
         "step": step,
         "treedef": str(treedef),
@@ -68,28 +113,49 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
     steps = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
-                steps.append(int(name.split("_")[1]))
+        step = _step_of(name)
+        if step is not None and \
+                os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(step)
     return max(steps) if steps else None
+
+
+def read_manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def load_leaf(path: str, entry: dict) -> np.ndarray:
+    """Load one leaf array, verifying byte count and (when present in the
+    manifest — older checkpoints predate it) the stored crc32."""
+    arr = np.load(os.path.join(path, entry["file"]))
+    if int(arr.nbytes) != entry["bytes"]:
+        raise IOError(f"integrity failure on {entry['file']}: "
+                      f"{arr.nbytes} bytes != manifest {entry['bytes']}")
+    crc = entry.get("crc32")
+    if crc is not None and int(zlib.crc32(arr.tobytes())) != crc:
+        raise IOError(f"integrity failure on {entry['file']}: crc32 mismatch")
+    return arr
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, like_tree: Any,
                        shardings: Any = None):
     """Restore into the structure of ``like_tree``; optionally device_put
     each leaf with the given sharding tree (elastic resharding)."""
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    path = step_path(ckpt_dir, step)
+    manifest = read_manifest(path)
     leaves, treedef = _flatten(like_tree)
     if manifest["n_leaves"] != len(leaves):
         raise ValueError(
             f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves)}")
+    stored_td = manifest.get("treedef")
+    if stored_td is not None and stored_td != str(treedef):
+        raise ValueError(
+            "checkpoint pytree structure does not match the restore target:\n"
+            f"  stored:   {stored_td}\n  expected: {treedef}")
     out = []
     for i, (entry, like) in enumerate(zip(manifest["entries"], leaves)):
-        arr = np.load(os.path.join(path, entry["file"]))
-        if int(arr.nbytes) != entry["bytes"]:
-            raise IOError(f"integrity failure on {entry['file']}")
+        arr = load_leaf(path, entry)
         if tuple(arr.shape) != tuple(like.shape):
             raise ValueError(
                 f"leaf {i} shape {arr.shape} != expected {tuple(like.shape)}")
@@ -105,8 +171,8 @@ def restore_checkpoint(ckpt_dir: str, step: int, like_tree: Any,
 def prune_checkpoints(ckpt_dir: str, keep: int = 3):
     if not os.path.isdir(ckpt_dir):
         return
-    steps = sorted(
-        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
-        if n.startswith("step_") and not n.endswith(".tmp"))
+    gc_incomplete(ckpt_dir)
+    steps = sorted(s for n in os.listdir(ckpt_dir)
+                   if (s := _step_of(n)) is not None)
     for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+        shutil.rmtree(step_path(ckpt_dir, s), ignore_errors=True)

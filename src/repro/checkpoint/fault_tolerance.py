@@ -1,4 +1,4 @@
-"""Fault tolerance for long training runs (DESIGN.md §6).
+"""Fault tolerance for long training AND simulation runs (DESIGN.md §6).
 
 ``RestartManager`` wraps the training loop:
   * periodic checkpoints (params, optimizer, data cursor, RNG) with pruning,
@@ -7,17 +7,29 @@
     data step (a common real-cluster failure mode),
   * failure injection hooks for tests (simulated preemption).
 
-``StragglerMonitor`` tracks per-step wall time and flags outliers; on real
-pods the hook triggers re-sharding away from the slow host — here it feeds
-the launcher's logging.  Note the paper's FAP execution model is itself the
-structural answer to stragglers for the simulation workload: there is no
-barrier to straggle on (paper §4.3).
+``FaultPlan`` generalises the same failure-injection hooks from
+loss-driven training steps to *simulation rounds*: the FAP drivers
+(``exec_common.run_checkpointed`` behind ``run_fap_spmd`` and the
+single-host vardt runners) consume it at round boundaries — kill at round
+k (``SimulatedFailure``, tests catch it and resume), poison one lane's
+BDF history with a non-finite value (the health watchdog must detect and
+roll back, never silently propagate), or an arbitrary ``mutate`` hook for
+scenario-specific corruption.
+
+``StragglerMonitor`` tracks per-step wall time over an O(window) deque
+(long FAP runs make millions of rounds — an unbounded list would leak)
+and flags outliers; on real pods the hook triggers re-sharding away from
+the slow host — here its ``stats()`` ride ``RunResult.health``.  Note the
+paper's FAP execution model is itself the structural answer to stragglers
+for the simulation workload: there is no barrier to straggle on (paper
+§4.3).
 """
 from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import numpy as np
@@ -30,13 +42,21 @@ from repro.checkpoint.checkpoint import (latest_step, prune_checkpoints,
 class StragglerMonitor:
     window: int = 32
     threshold: float = 2.5
-    times: list = field(default_factory=list)
+    times: Any = None          # deque(maxlen=window): O(window) memory
     flagged: int = 0
+    recorded: int = 0          # total steps seen (the deque forgets)
+
+    def __post_init__(self):
+        if self.times is None:
+            self.times = deque(maxlen=self.window)
+        elif not isinstance(self.times, deque):
+            self.times = deque(self.times, maxlen=self.window)
 
     def record(self, dt: float) -> bool:
         """Returns True if this step is a straggler."""
         self.times.append(dt)
-        hist = self.times[-self.window:]
+        self.recorded += 1
+        hist = list(self.times)
         if len(hist) < 8:
             return False
         med = float(np.median(hist[:-1]))
@@ -44,6 +64,36 @@ class StragglerMonitor:
             self.flagged += 1
             return True
         return False
+
+    def stats(self) -> dict:
+        """Host-side summary for ``RunResult.health`` (floats/ints only)."""
+        hist = list(self.times)
+        return {"recorded": self.recorded, "flagged": self.flagged,
+                "window_median_s": float(np.median(hist)) if hist else 0.0,
+                "window_max_s": float(max(hist)) if hist else 0.0}
+
+
+@dataclass
+class FaultPlan:
+    """Deterministic fault injection at simulation-round boundaries.
+
+    fail_at_round:   raise ``SimulatedFailure`` when the round counter hits
+                     this value (simulated preemption — the process "dies";
+                     tests catch it and relaunch with ``resume=True``).
+    poison_at_round: overwrite lane ``poison_lane``'s BDF history (``zn``)
+                     with ``poison_value`` at this round boundary, once —
+                     the health watchdog must detect the non-finite state,
+                     roll back to the last checkpoint and retry (the retry
+                     is clean, so the run completes identically).
+    mutate:          arbitrary hook ``(round_idx, carry) -> carry`` applied
+                     every round before stepping — scenario-specific
+                     corruption (repeated poisoning, queue tampering, ...).
+    """
+    fail_at_round: Optional[int] = None
+    poison_at_round: Optional[int] = None
+    poison_lane: int = 0
+    poison_value: float = float("nan")
+    mutate: Optional[Callable] = None
 
 
 @dataclass
@@ -99,7 +149,7 @@ class RestartManager:
             state = new_state
             if monitor.record(dt):
                 log_fn(f"[ft] straggler step {step}: {dt:.3f}s "
-                       f"(median ~{np.median(monitor.times[-32:]):.3f}s)")
+                       f"(median ~{monitor.stats()['window_median_s']:.3f}s)")
             history.append({"step": step, "loss": loss, "time_s": dt})
             if log_every and step % log_every == 0:
                 log_fn(f"step {step}: loss={loss:.4f} ({dt:.2f}s)")

@@ -48,6 +48,11 @@ class RunResult(NamedTuple):
                                # (vardt runners: nst/nni/nfe/nsetups/netf/
                                # nncf — nsetups/nni is the Jacobian-reuse
                                # ratio of the freshness policy)
+    health: object = None      # robustness telemetry dict (checkpointed
+                               # drivers: watchdog checks/rollbacks,
+                               # resume round, straggler stats, escalated
+                               # drop counters — exec_common.empty_health;
+                               # None on the fast jitted paths)
 
 
 def make_bsp_fixed_runner(model: CellModel, net: Network, iinj, t_end: float,
@@ -268,20 +273,72 @@ def make_bsp_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
         eq = spike_ins(eq, spiked, t_sp)
         return (sts, eq, rec, n_ev + nd, n_rs + nrs, stats), None
 
-    @jax.jit
-    def run():
+    def init_carry():
         Y = xc.batch_init(model, n)
         sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj)
         eq = qops.make(n)
         rec = ev.make_spike_record(n, SPK_CAP)
+        return (sts, eq, rec, jnp.zeros((), jnp.int32),
+                jnp.zeros((), jnp.int32), xc.SchedStats.zeros())
+
+    @jax.jit
+    def _run():
         (sts, eq, rec, n_ev, n_rs, stats), _ = jax.lax.scan(
-            window_body,
-            (sts, eq, rec, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
-             xc.SchedStats.zeros()),
-            jnp.arange(n_windows))
+            window_body, init_carry(), jnp.arange(n_windows))
         return RunResult(rec, sts.nst.sum(), n_ev, n_rs, eq.dropped,
                          sts.failed.any(), sts.zn[:, 0], stats,
                          solver=xc.solver_stats(sts))
+
+    jwindow = None
+
+    def run(checkpoint_every: int = 0, ckpt_dir=None, resume: bool = False,
+            fault=None, watchdog=None, max_rollbacks: int = 2,
+            ckpt_keep: int = 3):
+        """Nullary fast path; any robustness knob switches to the
+        host-stepped checkpointed driver (``exec_common.run_checkpointed``)
+        — one jitted window per host iteration, window index carried in
+        ``counters["rounds"]``.  Kill/resume and rollback runs are
+        bit-identical to the uninterrupted host-stepped run (one shared
+        compiled window); vs the scanned fast path agreement is to
+        floating-point ulp (XLA fuses the scan body differently)."""
+        robust = bool(checkpoint_every or resume or watchdog
+                      or fault is not None)
+        if not robust:
+            return _run()
+        nonlocal jwindow
+        if jwindow is None:     # compile once; reused across run() calls
+            jwindow = jax.jit(lambda c, w: window_body(c, w)[0])
+        if watchdog is None:
+            watchdog = True
+
+        def pack(c):
+            sts, eq, rec, n_ev, n_rs, stats = c[:6]
+            w = c[6] if len(c) > 6 else jnp.zeros((), jnp.int64)
+            return xc.SimCarry(sts, eq, rec, (), {
+                "n_ev": n_ev, "n_rs": n_rs, "stats": stats, "rounds": w})
+
+        def step_fn(sc):
+            c = jwindow((sc.sts, sc.eq, sc.rec, sc.counters["n_ev"],
+                         sc.counters["n_rs"], sc.counters["stats"]),
+                        sc.counters["rounds"])
+            return pack(c + (sc.counters["rounds"] + 1,))
+
+        sc, health = xc.run_checkpointed(
+            lambda: pack(init_carry()), step_fn,
+            lambda sc: int(sc.counters["rounds"]) < n_windows,
+            ckpt_dir=ckpt_dir, checkpoint_every=checkpoint_every,
+            resume=resume, keep=ckpt_keep, fault=fault,
+            health_of=((lambda sc, t_prev: xc.health_check(sc.sts, t_prev))
+                       if watchdog else None),
+            max_rollbacks=max_rollbacks)
+        sts, eq, rec = sc.sts, sc.eq, sc.rec
+        health["dropped_events"] = int(eq.dropped)
+        return RunResult(rec, sts.nst.sum(), sc.counters["n_ev"],
+                         sc.counters["n_rs"], eq.dropped,
+                         jnp.logical_or(sts.failed.any(),
+                                        health["rollback_exhausted"]),
+                         sts.zn[:, 0], sc.counters["stats"],
+                         solver=xc.solver_stats(sts), health=health)
 
     return run
 

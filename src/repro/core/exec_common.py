@@ -355,3 +355,262 @@ def spike_rates(rec: ev.SpikeRecord, t_lo: float, t_hi: float):
     """Per-neuron firing rate (Hz) in a window; times in ms."""
     m = jnp.logical_and(rec.times >= t_lo, rec.times < t_hi)
     return m.sum(axis=1) / ((t_hi - t_lo) * 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# preemption tolerance: round-boundary checkpoint/restore, fault injection
+# and the detected-never-silent health watchdog shared by every vardt
+# driver (single-host exec_fap/exec_bsp and the SPMD run_fap_spmd loop)
+# ---------------------------------------------------------------------------
+class SimCarry(NamedTuple):
+    """The full round-boundary state of a vardt run — everything the next
+    scheduler round reads, as ONE pytree so ``repro.checkpoint`` can save
+    and restore it leaf-for-leaf.  Resume from a ``SimCarry`` snapshot is
+    event-for-event identical to the uninterrupted run: same BDF history
+    (``sts`` is the batched ``bdf.BDFState`` including the Jacobian-cache
+    fields ``gamma_saved``/``nstlp``/``factors``), same pending events
+    (``eq`` is the queue pytree — dense ``EventQueue``, ``WheelQueue`` or
+    the SPMD round's raw ``(t, w_ampa, w_gaba)`` planes), same spike-record
+    cursor (``rec``) and the same solver/sched/comm counters.
+
+    ``hcarry`` holds the incremental-horizon carry (horizon, previous
+    boundary clocks, moved ids) where a runner maintains one — the only
+    mesh-shape-*dependent* leaves.  On elastic resume onto a different
+    mesh shape ``restore_sim_checkpoint`` skips exactly these and the
+    caller reseeds them from the restored clocks (a full recompute, which
+    the incremental scheme equals bitwise because min is exact).
+    """
+    sts: object        # batched bdf.BDFState pytree [N, ...]
+    eq: object         # queue pytree (EventQueue / WheelQueue / (t, wa, wg))
+    rec: object        # ev.SpikeRecord (times + per-neuron cursor + overflow)
+    hcarry: tuple      # incremental-horizon carry (possibly empty)
+    counters: object   # dict of scalar telemetry (n_ev/n_rs/rounds/stats/...)
+
+
+def empty_health(watchdog: bool = True) -> dict:
+    """The ``RunResult.health`` record every checkpointed driver fills.
+
+    Degradations follow the repo-wide detected-never-silent contract:
+    every rollback, regression, violation and drop is counted here, and
+    ``rollback_exhausted`` escalates to ``RunResult.failed``.
+    """
+    return {
+        "watchdog": bool(watchdog),
+        "checks": 0,                 # rounds the watchdog inspected
+        "nonfinite_rounds": 0,       # rounds with a non-finite lane detected
+        "clock_regressions": 0,      # lanes whose clock moved backwards
+        "horizon_violations": 0,     # carried horizon past clock + cap
+        "rollbacks": 0,              # quarantine-and-rollback events
+        "rollback_exhausted": False,  # bounded retries spent -> failed
+        "checkpoints_saved": 0,
+        "resumed_from": None,        # round the run resumed at (or None)
+        "elastic_reseeded": False,   # hcarry reseeded on mesh-shape change
+        "dropped_events": 0,         # queue + parcel overflow (escalated)
+        "straggler": None,           # StragglerMonitor.stats()
+    }
+
+
+def health_check(sts, t_prev, horizon=None, horizon_cap=None,
+                 eps: float = 1e-9) -> dict:
+    """Cheap per-round finiteness/invariant check (jit-safe scalars).
+
+    * a lane is non-finite when any of its BDF history ``zn``, clock ``t``
+      or step size ``h`` stopped being finite — the poisoned state that
+      would otherwise propagate through parcels to the whole network,
+    * clocks must be monotone: ``t`` never moves behind the previous
+      round's clock (FAP lanes only ever advance),
+    * a carried dependency horizon can never exceed its lane's clock by
+      more than ``horizon_cap`` (the per-round advancement clamp) — drift
+      here means the incremental maintenance went stale.
+    """
+    lane_bad = jnp.logical_or(
+        ~jnp.isfinite(sts.zn).all(axis=tuple(range(1, sts.zn.ndim))),
+        jnp.logical_or(~jnp.isfinite(sts.t), ~jnp.isfinite(sts.h)))
+    out = {
+        "nonfinite_lanes": lane_bad.sum(dtype=jnp.int32),
+        "clock_regress": (sts.t < t_prev - eps).sum(dtype=jnp.int32),
+    }
+    if horizon is not None and horizon_cap is not None:
+        out["horizon_violations"] = \
+            (horizon > sts.t + horizon_cap + eps).sum(dtype=jnp.int32)
+    return out
+
+
+def poison_lane(carry: SimCarry, lane: int, value=jnp.nan) -> SimCarry:
+    """Fault injection: overwrite one lane's BDF history with ``value``
+    (non-finite by default) — the failure mode the watchdog must catch."""
+    sts = carry.sts
+    return carry._replace(sts=sts._replace(zn=sts.zn.at[lane].set(value)))
+
+
+def save_sim_checkpoint(ckpt_dir: str, rnd: int, carry: SimCarry,
+                        extras: dict = None, keep: int = 3) -> str:
+    """Atomic round-boundary snapshot (``repro.checkpoint`` commit
+    protocol) + pruning.  ``rnd`` is the scheduler-round counter."""
+    from repro.checkpoint import checkpoint as ck
+    path = ck.save_checkpoint(ckpt_dir, rnd, carry, extras=extras)
+    ck.prune_checkpoints(ckpt_dir, keep=keep)
+    return path
+
+
+def restore_sim_checkpoint(ckpt_dir: str, rnd: int, like: SimCarry,
+                           shardings=None):
+    """Restore a ``SimCarry`` snapshot into the structure of ``like``.
+
+    Returns (carry, extras, skipped) where ``skipped`` lists the tree
+    paths whose *stored* leaf shape no longer matches ``like`` — those
+    leaves keep ``like``'s value.  Shape drift is only legitimate for the
+    mesh-shape-dependent ``hcarry`` leaves (elastic resume onto a
+    different mesh); callers must reject any other skip and reseed the
+    horizon carry from the restored clocks.  Every restored leaf is
+    integrity-checked (nbytes + crc32) and the stored treedef must match
+    ``like``'s exactly.  ``shardings``: optional matching pytree of
+    shardings — restored leaves are ``device_put`` with theirs (the
+    ``restore_checkpoint(shardings=)`` elastic path).
+    """
+    from repro.checkpoint import checkpoint as ck
+
+    path = ck.step_path(ckpt_dir, rnd)
+    manifest = ck.read_manifest(path)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError(f"checkpoint has {manifest['n_leaves']} leaves, "
+                         f"expected {len(leaves)}")
+    stored_td = manifest.get("treedef")
+    if stored_td is not None and stored_td != str(treedef):
+        raise ValueError(
+            "checkpoint pytree structure does not match the restore target:"
+            f"\n  stored:   {stored_td}\n  expected: {treedef}")
+    paths = [jax.tree_util.keystr(kp) for kp, _ in
+             jax.tree_util.tree_flatten_with_path(like)[0]]
+    sh_leaves = treedef.flatten_up_to(shardings) if shardings is not None \
+        else [None] * len(leaves)
+    out, skipped = [], []
+    for entry, leaf, pstr, sh in zip(manifest["entries"], leaves, paths,
+                                     sh_leaves):
+        arr = ck.load_leaf(path, entry)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            skipped.append(pstr)
+            out.append(leaf)
+            continue
+        a = arr.astype(leaf.dtype)
+        out.append(jax.device_put(a, sh) if sh is not None
+                   else jnp.asarray(a))
+    return treedef.unflatten(out), manifest["extras"], skipped
+
+
+def run_checkpointed(init_fn, step_fn, cond_fn, *, ckpt_dir=None,
+                     checkpoint_every: int = 0, resume: bool = False,
+                     keep: int = 3, fault=None, health_of=None,
+                     max_rollbacks: int = 2, shardings=None, reseed=None,
+                     fingerprint=None, extras_fn=None, log_fn=None):
+    """Host-stepped scheduler-round loop with round-boundary
+    checkpoint/restore, fault injection and the health watchdog — the
+    preemption-tolerance harness every vardt driver shares.
+
+      init_fn() -> SimCarry                 fresh round-0 state
+      step_fn(SimCarry) -> SimCarry         one jitted scheduler round
+                                            (must bump counters["rounds"])
+      cond_fn(SimCarry) -> bool             host-side continue predicate
+      health_of(SimCarry, t_prev) -> dict   per-round watchdog scalars
+                                            (``health_check``; None = off)
+      fault: ``checkpoint.FaultPlan``       round-boundary injection
+      reseed(SimCarry) -> SimCarry          re-derive skipped (elastic)
+                                            ``hcarry`` leaves on restore
+      fingerprint: JSON-able layout id      saved in the manifest extras;
+                                            a restore whose stored value
+                                            differs forces ``reseed`` even
+                                            when leaf shapes coincide (a
+                                            mesh-shape change can keep the
+                                            hcarry widths while scrambling
+                                            their shard-relative contents)
+
+    Non-finite state detected by the watchdog quarantines the round:
+    restore the last checkpoint (round 0 via ``init_fn`` when none exists
+    yet) and retry, at most ``max_rollbacks`` times — then escalate
+    ``rollback_exhausted`` (the caller folds it into ``RunResult.failed``).
+    Detected, never silent: every event lands in the returned health dict.
+
+    Returns (final SimCarry, health dict).
+    """
+    import time as _time
+
+    from repro.checkpoint import checkpoint as ck
+    from repro.checkpoint.fault_tolerance import (SimulatedFailure,
+                                                  StragglerMonitor)
+
+    if (resume or checkpoint_every) and not ckpt_dir:
+        raise ValueError("checkpoint_every/resume need ckpt_dir=")
+    log = log_fn or (lambda *_: None)
+    monitor = StragglerMonitor()
+    health = empty_health(watchdog=health_of is not None)
+
+    def _restore(rnd, like):
+        carry, extras, skipped = restore_sim_checkpoint(
+            ckpt_dir, rnd, like, shardings=shardings)
+        stale = extras.get("fingerprint") != fingerprint \
+            if fingerprint is not None else False
+        if skipped or stale:
+            bad = [p for p in skipped if "hcarry" not in p]
+            if bad or reseed is None:
+                raise ValueError(f"checkpoint leaf shapes changed outside "
+                                 f"the horizon carry: {skipped}")
+            carry = reseed(carry)
+            health["elastic_reseeded"] = True
+        return carry
+
+    carry = init_fn()
+    if resume:
+        last = ck.latest_step(ckpt_dir)
+        if last is not None:
+            carry = _restore(last, carry)
+            health["resumed_from"] = last
+            log(f"[sim-ft] resumed from round {last}")
+    rollbacks = 0
+    poison_pending = fault is not None and fault.poison_at_round is not None
+    fail_pending = fault is not None and fault.fail_at_round is not None
+    while bool(cond_fn(carry)):
+        rnd = int(carry.counters["rounds"])
+        if fail_pending and rnd >= fault.fail_at_round:
+            raise SimulatedFailure(rnd)
+        if poison_pending and rnd >= fault.poison_at_round:
+            poison_pending = False
+            carry = poison_lane(carry, fault.poison_lane, fault.poison_value)
+            log(f"[sim-ft] poisoned lane {fault.poison_lane} at round {rnd}")
+        if fault is not None and fault.mutate is not None:
+            carry = fault.mutate(rnd, carry)
+        t_prev = carry.sts.t
+        t0 = _time.time()
+        new_carry = step_fn(carry)
+        if health_of is not None:
+            chk = {k: int(v) for k, v in health_of(new_carry, t_prev).items()}
+            health["checks"] += 1
+            health["clock_regressions"] += chk.get("clock_regress", 0)
+            health["horizon_violations"] += chk.get("horizon_violations", 0)
+            if chk.get("nonfinite_lanes", 0):
+                health["nonfinite_rounds"] += 1
+                rollbacks += 1
+                if rollbacks > max_rollbacks:
+                    health["rollback_exhausted"] = True
+                    log(f"[sim-ft] non-finite state at round {rnd}: "
+                        f"retries exhausted")
+                    carry = new_carry
+                    break
+                health["rollbacks"] += 1
+                last = ck.latest_step(ckpt_dir) if ckpt_dir else None
+                log(f"[sim-ft] non-finite state at round {rnd}; rolling "
+                    f"back to {'round ' + str(last) if last is not None else 'init'}")
+                carry = init_fn() if last is None else _restore(last, carry)
+                continue
+        monitor.record(_time.time() - t0)
+        carry = new_carry
+        r2 = int(carry.counters["rounds"])
+        if checkpoint_every and r2 % checkpoint_every == 0:
+            ex = dict(extras_fn()) if extras_fn else {}
+            if fingerprint is not None:
+                ex["fingerprint"] = fingerprint
+            save_sim_checkpoint(ckpt_dir, r2, carry, extras=ex or None,
+                                keep=keep)
+            health["checkpoints_saved"] += 1
+    health["straggler"] = monitor.stats()
+    return carry, health

@@ -347,12 +347,81 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                          sts.failed.any(), sts.zn[:, 0], stats,
                          solver=xc.solver_stats(sts)), rounds
 
-    def run():
-        return _run()
+    # --- preemption tolerance: SimCarry <-> round-carry packing ----------
+    # hcarry holds the incremental horizon (mesh/layout-dependent); all
+    # solver/sched counters ride a dict so repro.checkpoint snapshots the
+    # WHOLE round state leaf-for-leaf.
+    def pack(c):
+        if incremental:
+            sts, eq, rec, horizon, n_ev, n_rs, stats, rounds = c
+            h = (horizon,)
+        else:
+            sts, eq, rec, n_ev, n_rs, stats, rounds = c
+            h = ()
+        return xc.SimCarry(sts, eq, rec, h, {
+            "n_ev": n_ev, "n_rs": n_rs, "stats": stats, "rounds": rounds})
+
+    def unpack(sc):
+        c = (sc.sts, sc.eq, sc.rec, sc.counters["n_ev"],
+             sc.counters["n_rs"], sc.counters["stats"],
+             sc.counters["rounds"])
+        return c[:3] + tuple(sc.hcarry) + c[3:] if incremental else c
+
+    jround = None
+
+    def run(checkpoint_every: int = 0, ckpt_dir=None, resume: bool = False,
+            fault=None, watchdog=None, max_rollbacks: int = 2,
+            ckpt_keep: int = 3):
+        """Nullary fast path (jitted ``while_loop``); any robustness knob
+        switches to the host-stepped checkpointed driver.  Knobs are
+        call-time so ONE runner (one ``jax.jit(round_body)`` compile)
+        serves many kill/resume/poison scenarios — the Hypothesis
+        property tests depend on this.  Within the host-stepped mode
+        every run shares that one compiled round, so kill/resume and
+        watchdog-rollback runs are event-for-event IDENTICAL to the
+        uninterrupted host-stepped run; against the ``while_loop`` fast
+        path agreement is to floating-point ulp only (XLA fuses the
+        standalone round differently than the loop body)."""
+        robust = bool(checkpoint_every or resume or watchdog
+                      or fault is not None)
+        if not robust:
+            return _run()
+        nonlocal jround
+        if jround is None:      # compile once; reused across run() calls
+            jround = jax.jit(round_body)
+        if watchdog is None:
+            watchdog = True
+
+        health_of = None
+        if watchdog:
+            def health_of(sc, t_prev):
+                return xc.health_check(
+                    sc.sts, t_prev,
+                    horizon=sc.hcarry[0] if incremental else None,
+                    horizon_cap=horizon_cap)
+
+        sc, health = xc.run_checkpointed(
+            lambda: pack(init_carry()),
+            lambda sc: pack(jround(unpack(sc))),
+            lambda sc: bool(cond(unpack(sc))),
+            ckpt_dir=ckpt_dir, checkpoint_every=checkpoint_every,
+            resume=resume, keep=ckpt_keep, fault=fault,
+            health_of=health_of, max_rollbacks=max_rollbacks)
+        sts, eq, rec = sc.sts, sc.eq, sc.rec
+        health["dropped_events"] = int(eq.dropped)
+        res = RunResult(rec, sts.nst.sum(), sc.counters["n_ev"],
+                        sc.counters["n_rs"], eq.dropped,
+                        jnp.logical_or(sts.failed.any(),
+                                       health["rollback_exhausted"]),
+                        sts.zn[:, 0], sc.counters["stats"],
+                        solver=xc.solver_stats(sts), health=health)
+        return res, sc.counters["rounds"]
 
     run.init_carry = init_carry
     run.round_body = round_body
     run.cond = cond
+    run.pack = pack           # carry tuple <-> SimCarry (checkpoint tests)
+    run.unpack = unpack
     run.batch_cap = cap
     run.spike_cap = s_cap
     return run

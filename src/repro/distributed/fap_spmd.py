@@ -428,7 +428,10 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
                  max_rounds: int = 400, spk_cap: int = 128,
                  placement=None, batch: str = "dense", batch_cap: int = 0,
                  fanout: str = "dense", spike_cap: int = 0,
-                 horizon: str = "full", move_cap: int = 0):
+                 horizon: str = "full", move_cap: int = 0,
+                 checkpoint_every: int = 0, ckpt_dir=None,
+                 resume: bool = False, fault=None, watchdog: bool = True,
+                 max_rollbacks: int = 2, ckpt_keep: int = 3):
     """Drive the SPMD round to t_end on a concrete network; the host loop
     records spike trains and accumulates the per-round telemetry into the
     standard ``RunResult`` (dropped = queue + parcel overflow — detected,
@@ -439,6 +442,7 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
     before sharding and inverted on the returned spike record / final
     state, so results stay in the caller's neuron order while the notify
     frontier and parcel routing shrink with the realized locality.
+    Checkpoints store the *placed* order: resume with the same placement.
 
     batch / batch_cap / fanout / spike_cap / horizon / move_cap: forwarded
     to ``build_fap_round`` — "compact" runs the shard-local advance
@@ -448,6 +452,21 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
     not collected on the SPMD path; ``RunResult.comm`` records the
     realized parcel bytes summed over rounds — with the ragged transport
     this is the per-round class choice made visible).
+
+    Preemption tolerance (exec_common.run_checkpointed):
+    checkpoint_every=k snapshots the full round state (``SimCarry``) into
+    ckpt_dir every k rounds with the atomic-commit protocol; resume=True
+    restarts from the latest complete checkpoint, event-for-event
+    identical to the uninterrupted run.  Elastic resume onto a different
+    mesh shape works transparently: only the mesh-shaped horizon-carry
+    leaves are reseeded (a full recompute the incremental scheme equals
+    bitwise), everything else restores through
+    ``restore_checkpoint(shardings=)``.  fault: a
+    ``checkpoint.FaultPlan`` for kill/poison injection; watchdog (on by
+    default here) runs the per-round ``exec_common.health_check`` and
+    quarantine-and-rollback on non-finite state (bounded by
+    max_rollbacks, then ``RunResult.failed``); telemetry lands on
+    ``RunResult.health``.
     """
     from repro.core import events as ev
     from repro.core.exec_bsp import RunResult
@@ -475,10 +494,6 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
                                          horizon=horizon, move_cap=move_cap)
     qops = sched.get_queue_ops(queue, ev_cap=ev_cap, wheel=wheel)
     iinj_v = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
-    Y = xc.batch_init(model, n)
-    sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj_v)
-    eq = qops.make(n)
-    eq_t, eq_a, eq_g = eq.t, eq.w_ampa, eq.w_gaba
     dnet = xc.to_device(net)
     n_carry = 3 if horizon == "incremental" else 0
     # round-invariant args placed once with the build's shardings (the loop
@@ -487,42 +502,98 @@ def run_fap_spmd(model: CellModel, net, iinj, t_end: float, mesh,
         (dnet.pre, dnet.post, dnet.delay, dnet.w_ampa, dnet.w_gaba, iinj_v)
         + ex_args[10 + n_carry:],
         in_sh[4:10] + in_sh[10 + n_carry:])
-    carry = ()
-    if n_carry:
-        # seed exactly what a first-round full recompute would produce:
-        # clocks are all-zero, so the full-width scatter-min over the
-        # global edge list equals the shard-local notify-table chain
-        hor0 = xc.horizon_times(dnet, n, jnp.zeros((n,), jnp.float64),
-                                t_end, horizon_cap=horizon_cap)
+
+    def seed_hcarry(clocks):
+        """(horizon, prev boundary clocks, moved ids) seeded from a clock
+        vector: a full-recompute horizon (which the incremental chain
+        equals bitwise — min is exact), all-zero previous boundary clocks
+        (every frontier entry looks moved next round -> extra or full
+        recompute, still exact) and sentinel moved ids.  Round 0 and
+        elastic resume share this."""
+        hor0 = xc.horizon_times(dnet, n, clocks, t_end,
+                                horizon_cap=horizon_cap)
         prev0 = jnp.zeros(ex_args[11].shape, jnp.float64)  # boundary clocks
         moved0 = jnp.full(ex_args[12].shape, n // int(np.prod(
             [mesh.shape[a] for a in mesh.axis_names])), jnp.int32)
-        carry = tuple(jax.device_put((hor0, prev0, moved0), in_sh[10:13]))
+        return tuple(jax.device_put((hor0, prev0, moved0), in_sh[10:13]))
+
     jfn = jax.jit(fn, in_shardings=in_sh)
-    rec = ev.make_spike_record(n, spk_cap)
     neuron_ids = jnp.arange(n, dtype=jnp.int32)    # hoisted round constant
-    n_ev = n_rs = n_drop = 0
-    p_bytes = 0
-    rounds = 0
-    while rounds < max_rounds:
-        out = jfn(sts, eq_t, eq_a, eq_g, *static[:6], *carry, *static[6:])
+    repl = NamedSharding(mesh, P())
+    z64 = jnp.zeros((), jnp.int64)
+
+    def init_fn():
+        Y = xc.batch_init(model, n)
+        sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(
+            Y, iinj_v)
+        eq = qops.make(n)
+        hcarry = seed_hcarry(jnp.zeros((n,), jnp.float64)) if n_carry else ()
+        rec = ev.make_spike_record(n, spk_cap)
+        return xc.SimCarry(sts, (eq.t, eq.w_ampa, eq.w_gaba), rec, hcarry,
+                           {"n_ev": z64, "n_rs": z64, "dropped": z64,
+                            "parcel_bytes": z64,
+                            "rounds": jnp.zeros((), jnp.int32)})
+
+    def step_fn(sc):
+        eq_t, eq_a, eq_g = sc.eq
+        out = jfn(sc.sts, eq_t, eq_a, eq_g, *static[:6], *sc.hcarry,
+                  *static[6:])
         (sts, eq_t, eq_a, eq_g, spiked, t_sp, nd, nrs, dropped,
          pbytes) = out[:10]
-        carry = out[10:]
-        rec = ev.record_spikes(rec, neuron_ids, t_sp, spiked)
-        n_ev += int(nd)
-        n_rs += int(nrs)
-        n_drop += int(dropped)
-        p_bytes += int(pbytes)
-        rounds += 1
-        if float(sts.t.min()) >= t_end - 1e-9 or bool(sts.failed.any()):
-            break
-    res = RunResult(rec, sts.nst.sum(), jnp.asarray(n_ev, jnp.int32),
-                    jnp.asarray(n_rs, jnp.int32),
-                    jnp.asarray(n_drop, jnp.int32), sts.failed.any(),
+        rec = ev.record_spikes(sc.rec, neuron_ids, t_sp, spiked)
+        c = sc.counters
+        return xc.SimCarry(sts, (eq_t, eq_a, eq_g), rec, out[10:], {
+            "n_ev": c["n_ev"] + nd, "n_rs": c["n_rs"] + nrs,
+            "dropped": c["dropped"] + dropped,
+            "parcel_bytes": c["parcel_bytes"] + pbytes,
+            "rounds": c["rounds"] + 1})
+
+    def cond_fn(sc):
+        return (int(sc.counters["rounds"]) < max_rounds
+                and float(sc.sts.t.min()) < t_end - 1e-9
+                and not bool(sc.sts.failed.any()))
+
+    # SimCarry-shaped sharding tree for restore: the build's input
+    # shardings where they exist, replicated for the host-side leaves
+    # (spike record + counters) — the elastic-resume device_put path
+    sh_tree = xc.SimCarry(
+        in_sh[0], in_sh[1:4],
+        jax.tree_util.tree_map(lambda _: repl, ev.make_spike_record(1, 1)),
+        tuple(in_sh[10:13]) if n_carry else (),
+        {k_: repl for k_ in ("n_ev", "n_rs", "dropped", "parcel_bytes",
+                             "rounds")})
+
+    def health_of(sc, t_prev):
+        return xc.health_check(
+            sc.sts, t_prev, horizon=sc.hcarry[0] if n_carry else None,
+            horizon_cap=horizon_cap)
+
+    # layout fingerprint: a resume whose mesh/transport layout changed must
+    # reseed the shard-relative hcarry even when its widths coincide
+    fingerprint = {"mesh_shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+                   "transport": transport, "batch_cap": int(batch_cap),
+                   "horizon": horizon} if n_carry else None
+    sc, health = xc.run_checkpointed(
+        init_fn, step_fn, cond_fn, ckpt_dir=ckpt_dir,
+        checkpoint_every=checkpoint_every, resume=resume, keep=ckpt_keep,
+        fault=fault, health_of=health_of if watchdog else None,
+        max_rollbacks=max_rollbacks, shardings=sh_tree,
+        fingerprint=fingerprint,
+        reseed=(lambda sc: sc._replace(hcarry=seed_hcarry(sc.sts.t)))
+        if n_carry else None)
+    sts = sc.sts
+    rounds = int(sc.counters["rounds"])
+    health["dropped_events"] = int(sc.counters["dropped"])
+    res = RunResult(sc.rec, sts.nst.sum(),
+                    jnp.asarray(sc.counters["n_ev"], jnp.int32),
+                    jnp.asarray(sc.counters["n_rs"], jnp.int32),
+                    jnp.asarray(sc.counters["dropped"], jnp.int32),
+                    jnp.logical_or(sts.failed.any(),
+                                   health["rollback_exhausted"]),
                     sts.zn[:, 0],
-                    comm={"parcel_bytes": p_bytes, "rounds": rounds},
-                    solver=xc.solver_stats(sts))
+                    comm={"parcel_bytes": int(sc.counters["parcel_bytes"]),
+                          "rounds": rounds},
+                    solver=xc.solver_stats(sts), health=health)
     if pl is not None:
         res = plc.unpermute_result(res, pl)
     return res, rounds

@@ -132,6 +132,73 @@ def test_elastic_restore_resharding(tmp_path):
     assert t2["w"].sharding == sh["w"]
 
 
+def test_crc32_corruption_detected(tmp_path):
+    """Bit rot in a leaf file (size-preserving) must fail the restore —
+    the nbytes check alone cannot see it."""
+    t = _tree(jax.random.PRNGKey(0))
+    path = save_checkpoint(str(tmp_path), 1, t)
+    m = json.load(open(os.path.join(path, "manifest.json")))
+    fname = os.path.join(path, m["entries"][0]["file"])
+    arr = np.load(fname)
+    arr.flat[0] += 1.0                       # same nbytes, different bits
+    np.save(fname, arr)
+    with pytest.raises(IOError, match="crc32"):
+        restore_checkpoint(str(tmp_path), 1, t)
+
+
+def test_treedef_mismatch_detected(tmp_path):
+    """A restore target with the same leaf count but different structure
+    must be rejected, not silently restored leaf-by-leaf."""
+    t = _tree(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 1, t)
+    other = {"a": t["a"], "z": {"q": t["b"]["c"]}}    # 2 leaves, new keys
+    with pytest.raises(ValueError, match="structure"):
+        restore_checkpoint(str(tmp_path), 1, other)
+
+
+def test_stray_entries_tolerated(tmp_path):
+    """``step_old/`` backups and loose files must not trip the step
+    parser in latest_step or prune_checkpoints."""
+    t = _tree(jax.random.PRNGKey(0))
+    for s in [1, 2, 3]:
+        save_checkpoint(str(tmp_path), s, t)
+    os.makedirs(tmp_path / "step_old")
+    (tmp_path / "notes.txt").write_text("scratch")
+    os.makedirs(tmp_path / "step_00000002.tmp")      # crashed save
+    assert latest_step(str(tmp_path)) == 3
+    prune_checkpoints(str(tmp_path), keep=1)
+    assert latest_step(str(tmp_path)) == 3
+    assert (tmp_path / "step_old").exists()          # not a checkpoint: kept
+    assert (tmp_path / "notes.txt").exists()
+    assert not (tmp_path / "step_00000002.tmp").exists()   # GCed
+
+
+def test_gc_incomplete(tmp_path):
+    from repro.checkpoint import gc_incomplete
+    t = _tree(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 1, t)
+    os.makedirs(tmp_path / "step_00000005.tmp")
+    removed = gc_incomplete(str(tmp_path))
+    assert removed == ["step_00000005.tmp"]
+    assert latest_step(str(tmp_path)) == 1           # complete one untouched
+
+
+def test_straggler_monitor_bounded_memory():
+    """record() keeps O(window) history (a deque), not an unbounded list,
+    and stats() summarises for RunResult.health."""
+    from repro.checkpoint import StragglerMonitor
+    mon = StragglerMonitor(window=16)
+    for _ in range(10_000):
+        mon.record(0.01)
+    assert len(mon.times) == 16
+    assert mon.recorded == 10_000
+    assert mon.record(1.0)                           # 100x median: flagged
+    s = mon.stats()
+    assert s["flagged"] == 1 and s["recorded"] == 10_001
+    assert s["window_max_s"] == 1.0
+    assert abs(s["window_median_s"] - 0.01) < 1e-12
+
+
 def test_data_pipeline_determinism_and_cursor():
     cfg = ARCHS["smollm-135m"].reduced()
     shape = ShapeConfig("t", 16, 2, "train")
