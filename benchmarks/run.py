@@ -11,8 +11,8 @@ def main() -> None:
     from benchmarks import (accuracy_fig5, active_set, delays_fig3,
                             discontinuities_fig7, event_wheel, exchange,
                             lab_experiment_fig8, placement, regimes_fig9,
-                            robustness, roofline, solver, speedup_fig10,
-                            stiffness_fig6)
+                            robustness, roofline, serve, solver,
+                            speedup_fig10, stiffness_fig6)
     modules = [
         ("fig3", delays_fig3.run),
         ("fig5", accuracy_fig5.run),
@@ -27,6 +27,7 @@ def main() -> None:
         ("active_set", active_set.run),
         ("solver", solver.run),
         ("robustness", robustness.run),
+        ("serve", serve.run),
         ("roofline", lambda: roofline.run(mesh="all")),
     ]
     from benchmarks.common import dump_json

@@ -1,0 +1,144 @@
+"""Multi-tenant simulation serving (ISSUE 10): admission latency,
+rounds-per-tenant under mixed QoS, and quarantine overhead vs a
+fault-free batch — each asserted, all checkpoint/queue state in
+hermetic tmpdirs.
+
+  serve/admission_latency     wall cost of admitting one tenant into a
+                              freed lane (fresh carry init + lane write).
+  serve/round_mixed_qos       per-service-round wall time with a mixed
+                              QoS batch; derived reports rounds-per-
+                              tenant per class (the frontier cap's
+                              throttle, asserted slower for the capped
+                              class).
+  serve/quarantine_overhead   end-to-end wall overhead of a poison ->
+                              quarantine -> backoff -> retry cycle vs
+                              the fault-free batch, asserting the CI
+                              acceptance: the poisoned tenant completes
+                              bit-identically to its solo run, every
+                              other tenant bit-identically to the
+                              fault-free batch, and an overloaded queue
+                              sheds only lowest-QoS with explicit
+                              rejection counts — zero silent drops.
+
+Quick mode (REPRO_BENCH_QUICK=1) trims lanes/network/horizon for
+check.sh.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import dump_json, emit, soma_model
+from repro.checkpoint import ExponentialBackoff, FaultPlan
+from repro.core import exec_fap, network
+from repro.serve import SimService, TenantRequest
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK") == "1"
+
+
+def _reqs(k, **kw):
+    return [TenantRequest(rid=r, iinj=0.14 + 0.01 * (r % 5), **kw)
+            for r in range(k)]
+
+
+def run():
+    n = 16 if QUICK else 32
+    t_end = 5.0 if QUICK else 10.0
+    lanes = 3 if QUICK else 4
+    model = soma_model()
+    net = network.make_network(n, k_in=4, seed=3)
+    runner = exec_fap.make_fap_vardt_runner(model, net, 0.0, t_end)
+
+    def svc(**kw):
+        kw.setdefault("lanes", lanes)
+        return SimService(runner=runner, t_end=t_end, **kw)
+
+    # --- warm: compile the vmapped round + fault-free baseline ------------
+    s = svc()
+    for r in _reqs(lanes):
+        s.submit(r)
+    s.run()                                   # compile + warm
+    s = svc()
+    for r in _reqs(lanes):
+        s.submit(r)
+    t0 = time.perf_counter()
+    base = s.run()
+    base_s = time.perf_counter() - t0
+    assert base.completed == lanes and base.rejected == 0
+    base_rounds = base.rounds
+
+    # --- admission latency: one tenant into a freed lane ------------------
+    s = svc()
+    t0 = time.perf_counter()
+    s.submit(TenantRequest(rid=0, iinj=0.15))
+    s._admit()
+    import jax
+    jax.block_until_ready(s._carry[0].t)
+    admit_s = time.perf_counter() - t0
+    emit("serve/admission_latency", admit_s * 1e6,
+         f"lanes={lanes} n={n} fresh-carry init + masked lane write")
+
+    # --- mixed QoS: capped class pays rounds, not starvation --------------
+    cap = max(2, n // 8)
+    s = svc(qos_caps={0: cap})
+    mixed = [TenantRequest(rid=r, iinj=0.15, qos=r % 2)
+             for r in range(lanes)]
+    for r in mixed:
+        s.submit(r)
+    t0 = time.perf_counter()
+    res = s.run()
+    mixed_s = time.perf_counter() - t0
+    assert res.completed == lanes, res
+    r_lo = [res.results[r.rid].rounds for r in mixed if r.qos == 0]
+    r_hi = [res.results[r.rid].rounds for r in mixed if r.qos == 1]
+    assert min(r_lo) > max(r_hi), (r_lo, r_hi)   # cap throttles, never starves
+    emit("serve/round_mixed_qos", mixed_s / max(1, res.rounds) * 1e6,
+         f"cap={cap} rounds/tenant qos0={np.mean(r_lo):.0f} "
+         f"qos1={np.mean(r_hi):.0f}")
+
+    # --- quarantine overhead + the CI acceptance assertions ---------------
+    solo = {}
+    for r in _reqs(lanes):
+        s = svc()
+        s.submit(r)
+        solo[r.rid] = s.run().results[r.rid]
+    victim = 1
+    fault = FaultPlan(poison_at_round=4, poison_tenant=victim,
+                      poison_lane=1)
+    s = svc(fault=fault, backoff=ExponentialBackoff(max_retries=3))
+    for r in _reqs(lanes):
+        s.submit(r)
+    t0 = time.perf_counter()
+    res = s.run()
+    poison_s = time.perf_counter() - t0
+    assert res.quarantines >= 1 and res.retried >= 1, res
+    assert res.completed == lanes, res
+    for rid in range(lanes):
+        got, want = res.results[rid], base.results[rid]
+        assert np.array_equal(got.times, want.times), f"tenant {rid} perturbed"
+        assert np.array_equal(got.count, want.count)
+        assert np.array_equal(got.times, solo[rid].times)
+    emit("serve/quarantine_overhead", (poison_s - base_s) * 1e6,
+         f"retries={res.retried} extra_rounds={res.rounds - base_rounds} "
+         f"neighbours+solo bit-identical")
+
+    # --- overload shedding: explicit, lowest-QoS only ---------------------
+    s = svc(queue_cap=lanes)
+    lo = [TenantRequest(rid=100 + r, iinj=0.15, qos=0) for r in range(lanes)]
+    hi = [TenantRequest(rid=200 + r, iinj=0.15, qos=2) for r in range(lanes)]
+    for r in lo + hi:
+        s.submit(r)
+    res = s.run()
+    assert res.shed == lanes and res.rejected == lanes, res
+    assert all(res.results[r.rid].status == "rejected" and
+               res.results[r.rid].reason == "shed:queue_full" for r in lo)
+    assert all(res.results[r.rid].status == "completed" for r in hi)
+    res.assert_accounting()                      # zero silent drops
+
+    dump_json("serve")
+
+
+if __name__ == "__main__":
+    run()

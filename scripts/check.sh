@@ -52,4 +52,11 @@ echo "== kill-resume smoke (checkpoint -> SimulatedFailure -> resume) =="
 # tmpdirs the suite removes itself, so the gate stays hermetic
 REPRO_BENCH_QUICK=1 python -c "from benchmarks import robustness; robustness.run()"
 
+echo "== tenant-serving smoke (admission / quarantine / shedding) =="
+# asserts the multi-tenant service's isolation acceptance: a poisoned
+# tenant is quarantined, retried and completes bit-identically to its
+# solo run, neighbours are bit-identical to the fault-free batch, and an
+# overloaded queue sheds only lowest-QoS with explicit rejection counts
+REPRO_BENCH_QUICK=1 python -c "from benchmarks import serve; serve.run()"
+
 echo "check.sh: all green"

@@ -1,6 +1,12 @@
 from repro.checkpoint.checkpoint import (gc_incomplete, latest_step,  # noqa: F401
+                                         latest_tenant_step, list_tenants,
                                          prune_checkpoints,
-                                         restore_checkpoint, save_checkpoint)
-from repro.checkpoint.fault_tolerance import (FaultPlan, RestartManager,  # noqa: F401
+                                         prune_tenant_checkpoints,
+                                         restore_checkpoint,
+                                         restore_tenant_checkpoint,
+                                         save_checkpoint,
+                                         save_tenant_checkpoint, tenant_dir)
+from repro.checkpoint.fault_tolerance import (ExponentialBackoff,  # noqa: F401
+                                              FaultPlan, RestartManager,
                                               SimulatedFailure,
                                               StragglerMonitor)

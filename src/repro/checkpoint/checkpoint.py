@@ -168,6 +168,52 @@ def restore_checkpoint(ckpt_dir: str, step: int, like_tree: Any,
     return treedef.unflatten(out), manifest["extras"]
 
 
+# --- per-tenant checkpoints (repro.serve) ----------------------------------
+#
+# The multi-tenant service snapshots each tenant's SimCarry *slice*
+# independently: one tenant's rollback must never rewind a neighbour, so
+# each request id gets its own checkpoint directory (same atomic-commit +
+# manifest format — ``tenant_000007/step_00000042/``).  The tenant id is
+# also recorded in the manifest extras so a directory listing alone can be
+# audited against the service's accounting.
+
+def tenant_dir(ckpt_dir: str, tenant: int) -> str:
+    return os.path.join(ckpt_dir, f"tenant_{int(tenant):06d}")
+
+
+def save_tenant_checkpoint(ckpt_dir: str, tenant: int, step: int, tree: Any,
+                           extras: Optional[dict] = None) -> str:
+    ex = dict(extras or {})
+    ex["tenant"] = int(tenant)
+    return save_checkpoint(tenant_dir(ckpt_dir, tenant), step, tree, extras=ex)
+
+
+def latest_tenant_step(ckpt_dir: str, tenant: int) -> Optional[int]:
+    return latest_step(tenant_dir(ckpt_dir, tenant))
+
+
+def restore_tenant_checkpoint(ckpt_dir: str, tenant: int, step: int,
+                              like_tree: Any, shardings: Any = None):
+    return restore_checkpoint(tenant_dir(ckpt_dir, tenant), step, like_tree,
+                              shardings=shardings)
+
+
+def list_tenants(ckpt_dir: str) -> list:
+    """Tenant ids that have at least one complete checkpoint on disk."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.match(r"^tenant_(\d{6})$", name)
+        if m and latest_step(os.path.join(ckpt_dir, name)) is not None:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def prune_tenant_checkpoints(ckpt_dir: str, tenant: int, keep: int = 2):
+    prune_checkpoints(tenant_dir(ckpt_dir, tenant), keep)
+
+
 def prune_checkpoints(ckpt_dir: str, keep: int = 3):
     if not os.path.isdir(ckpt_dir):
         return

@@ -40,17 +40,28 @@ from repro.checkpoint.checkpoint import (latest_step, prune_checkpoints,
 
 @dataclass
 class StragglerMonitor:
+    """``window`` and the regression ``threshold`` (flag a step slower than
+    threshold x the rolling window median) are constructor knobs — the
+    checkpointed drivers accept a configured monitor via
+    ``run_checkpointed(straggler=...)`` and ``repro.serve`` exposes both
+    on the service so shedding decisions are tunable AND observable
+    (``stats()`` rides ``RunResult.health`` / ``ServeResult.health``)."""
     window: int = 32
     threshold: float = 2.5
     times: Any = None          # deque(maxlen=window): O(window) memory
     flagged: int = 0
     recorded: int = 0          # total steps seen (the deque forgets)
+    flags: Any = None          # deque(maxlen=window) of recent verdicts
 
     def __post_init__(self):
         if self.times is None:
             self.times = deque(maxlen=self.window)
         elif not isinstance(self.times, deque):
             self.times = deque(self.times, maxlen=self.window)
+        if self.flags is None:
+            self.flags = deque(maxlen=self.window)
+        elif not isinstance(self.flags, deque):
+            self.flags = deque(self.flags, maxlen=self.window)
 
     def record(self, dt: float) -> bool:
         """Returns True if this step is a straggler."""
@@ -58,17 +69,31 @@ class StragglerMonitor:
         self.recorded += 1
         hist = list(self.times)
         if len(hist) < 8:
+            self.flags.append(False)
             return False
         med = float(np.median(hist[:-1]))
-        if dt > self.threshold * med:
+        slow = dt > self.threshold * med
+        self.flags.append(slow)
+        if slow:
             self.flagged += 1
-            return True
-        return False
+        return slow
+
+    def sustained(self, frac: float = 0.25, min_steps: int = 8) -> bool:
+        """Sustained round-time regression: at least ``frac`` of the last
+        ``window`` recorded steps were flagged (and enough were seen to
+        mean anything).  The overload-shedding trigger in ``repro.serve``
+        — one slow step is noise, a quarter of the window is a regime."""
+        hist = list(self.flags)
+        if len(hist) < min_steps:
+            return False
+        return sum(hist) >= frac * len(hist)
 
     def stats(self) -> dict:
         """Host-side summary for ``RunResult.health`` (floats/ints only)."""
         hist = list(self.times)
         return {"recorded": self.recorded, "flagged": self.flagged,
+                "window": self.window, "threshold": self.threshold,
+                "sustained": self.sustained(),
                 "window_median_s": float(np.median(hist)) if hist else 0.0,
                 "window_max_s": float(max(hist)) if hist else 0.0}
 
@@ -88,12 +113,45 @@ class FaultPlan:
     mutate:          arbitrary hook ``(round_idx, carry) -> carry`` applied
                      every round before stepping — scenario-specific
                      corruption (repeated poisoning, queue tampering, ...).
+    poison_tenant:   multi-tenant target (``repro.serve``): the *request
+                     id* whose lane gets the poison.  The injection waits
+                     until that tenant is admitted and running (rounds are
+                     service rounds there), and ``poison_lane`` indexes
+                     the neuron within the tenant's own network.  The
+                     single-run drivers ignore this field.
     """
     fail_at_round: Optional[int] = None
     poison_at_round: Optional[int] = None
     poison_lane: int = 0
     poison_value: float = float("nan")
     mutate: Optional[Callable] = None
+    poison_tenant: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class ExponentialBackoff:
+    """Bounded exponential retry schedule, in *scheduler rounds* (the
+    serving layer's unit of time) — the ``RestartManager`` NaN-quarantine
+    pattern factored out so training restarts and per-tenant simulation
+    retries share one policy.  Retry ``a`` (1-based) waits
+    ``min(cap, base * factor**(a-1))`` rounds; after ``max_retries``
+    failed attempts the caller must evict/escalate (never loop silently).
+    """
+    base: int = 2
+    factor: float = 2.0
+    cap: int = 32
+    max_retries: int = 3
+
+    def delay(self, attempt: int) -> int:
+        """Rounds to wait before retry ``attempt`` (1-based), capped."""
+        if attempt < 1:
+            raise ValueError("attempt is 1-based")
+        return int(min(self.cap, self.base * self.factor ** (attempt - 1)))
+
+    def budget(self) -> int:
+        """Total backoff rounds across the full retry budget — the bound
+        the admission-queue property tests assert against."""
+        return sum(self.delay(a) for a in range(1, self.max_retries + 1))
 
 
 @dataclass

@@ -436,6 +436,29 @@ def health_check(sts, t_prev, horizon=None, horizon_cap=None,
     return out
 
 
+def health_check_tenants(sts, t_prev, eps: float = 1e-9) -> dict:
+    """Per-tenant verdicts of the same invariants as ``health_check`` over
+    a vmapped tenant axis (``repro.serve``): every ``sts`` leaf carries a
+    leading [T] lane axis ([T, N, ...]), and each tenant's verdict reduces
+    only over its OWN neurons — one poisoned tenant never taints a
+    neighbour's verdict.  Returns arrays [T]:
+
+      nonfinite_lanes  i32[T]  neurons whose zn/t/h went non-finite
+      clock_regress    i32[T]  neurons whose clock moved backwards
+      solver_failed    bool[T] BDF gave up (latched ``failed``) on a
+                               *finite* state — deterministic, so the
+                               service evicts rather than retries
+    """
+    zn_ok = jnp.isfinite(sts.zn).all(axis=tuple(range(2, sts.zn.ndim)))
+    lane_bad = jnp.logical_or(
+        ~zn_ok, jnp.logical_or(~jnp.isfinite(sts.t), ~jnp.isfinite(sts.h)))
+    return {
+        "nonfinite_lanes": lane_bad.sum(axis=1, dtype=jnp.int32),
+        "clock_regress": (sts.t < t_prev - eps).sum(axis=1, dtype=jnp.int32),
+        "solver_failed": sts.failed.any(axis=1),
+    }
+
+
 def poison_lane(carry: SimCarry, lane: int, value=jnp.nan) -> SimCarry:
     """Fault injection: overwrite one lane's BDF history with ``value``
     (non-finite by default) — the failure mode the watchdog must catch."""
@@ -503,7 +526,8 @@ def run_checkpointed(init_fn, step_fn, cond_fn, *, ckpt_dir=None,
                      checkpoint_every: int = 0, resume: bool = False,
                      keep: int = 3, fault=None, health_of=None,
                      max_rollbacks: int = 2, shardings=None, reseed=None,
-                     fingerprint=None, extras_fn=None, log_fn=None):
+                     fingerprint=None, extras_fn=None, log_fn=None,
+                     straggler=None):
     """Host-stepped scheduler-round loop with round-boundary
     checkpoint/restore, fault injection and the health watchdog — the
     preemption-tolerance harness every vardt driver shares.
@@ -542,7 +566,9 @@ def run_checkpointed(init_fn, step_fn, cond_fn, *, ckpt_dir=None,
     if (resume or checkpoint_every) and not ckpt_dir:
         raise ValueError("checkpoint_every/resume need ckpt_dir=")
     log = log_fn or (lambda *_: None)
-    monitor = StragglerMonitor()
+    # straggler: a caller-configured StragglerMonitor (window / regression
+    # threshold knobs); default keeps the historical 32-round window
+    monitor = straggler if straggler is not None else StragglerMonitor()
     health = empty_health(watchdog=health_of is not None)
 
     def _restore(rnd, like):

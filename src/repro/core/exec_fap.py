@@ -239,7 +239,17 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
         t_sp = xc.scatter_at(jnp.zeros((n,)), ids, tsp_b)
         return spike_ins(eq, spiked, t_sp)
 
-    def round_body(carry):
+    def _round(carry, iinj_r, active=None, k_qos=None):
+        """One scheduler round.  ``iinj_r`` is the per-neuron stimulus as a
+        traced argument (the legacy path closes over the construction-time
+        value — identical jaxpr); ``active``/``k_qos`` are the multi-tenant
+        serving hooks (``repro.serve``): a scalar bool that masks the whole
+        lane out of the round (a quarantined or idle tenant — the round is
+        then a semantic no-op on its state, which is what makes the
+        tenant's trajectory independent of the service's activity
+        schedule) and a traced earliest-``k`` frontier restriction (the
+        per-tenant QoS cap; 0 = unlimited).  Both default to None, which
+        traces nothing extra — the single-tenant runners are untouched."""
         if incremental:
             sts, eq, rec, horizon, n_ev, n_rs, stats, rounds = carry
         else:
@@ -268,6 +278,17 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
             score = jnp.where(runnable, t_clock, jnp.inf)
             kth = jnp.sort(score)[min(k_select, n) - 1]
             runnable = jnp.logical_and(runnable, score <= kth)
+        if active is not None:
+            # tenant-lane mask: an inactive lane advances nothing
+            runnable = jnp.logical_and(runnable, active)
+        if k_qos is not None:
+            # per-tenant QoS frontier cap: restrict to the k_qos earliest
+            # runnable neurons (traced k — one compiled round serves every
+            # class); k_qos <= 0 selects everything (tau = max finite)
+            score = jnp.where(runnable, t_clock, jnp.inf)
+            k_eff = jnp.where(k_qos > 0, jnp.minimum(k_qos, n), n)
+            tau = ew_ops.select_threshold(score, k_eff, n_iters=n_bisect)
+            runnable = jnp.logical_and(runnable, score <= tau)
         n_runnable = runnable.sum(dtype=jnp.int64)
 
         if batch == "compact":
@@ -281,7 +302,7 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
             eqt_b, eqa_b, eqg_b = sched.gather_rows(eq, idc)
             sts_b, eqt_b, spiked_b, tsp_b, nd, nrs = vadvance(
                 sts_b, eqt_b, eqa_b, eqg_b, horizon[idc], lane_ok,
-                iinj_v[idc])
+                iinj_r[idc])
             sts = xc.scatter_lanes(sts, sts_b, ids)
             eq = sched.scatter_rows(eq, ids, eqt_b)
             rec = ev.record_spikes(rec, ids, tsp_b, spiked_b)
@@ -303,7 +324,7 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
                                   stats.rounds + 1)
         else:
             sts, eq_t, spiked, t_sp, nd, nrs = vadvance(
-                sts, eq.t, eq.w_ampa, eq.w_gaba, horizon, runnable, iinj_v)
+                sts, eq.t, eq.w_ampa, eq.w_gaba, horizon, runnable, iinj_r)
             eq = eq._replace(t=eq_t)
             rec = ev.record_spikes(rec, neuron_ids, t_sp, spiked)
             eq = spike_ins(eq, spiked, t_sp)
@@ -317,15 +338,30 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
             out = out[:3] + (horizon,) + out[3:]
         return out
 
+    def round_body(carry):
+        return _round(carry, iinj_v)
+
+    def tenant_round(carry, iinj, active, k_qos=0):
+        """Round with call-time stimulus + lane mask + QoS frontier cap —
+        the per-tenant unit ``repro.serve`` vmaps over its lane axis
+        (in_axes=(0, 0, 0, 0): carry leaves [T, ...], iinj [T, N],
+        active bool[T], k_qos i32[T])."""
+        i = jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
+        return _round(carry, i, active, k_qos)
+
     def cond(carry):
         sts, rounds = carry[0], carry[-1]
         return jnp.logical_and(sts.t.min() < t_end - 1e-9,
                                jnp.logical_and(rounds < max_rounds,
                                                ~sts.failed.any()))
 
-    def init_carry():
+    def init_carry(iinj=None):
+        """Fresh round-0 carry; ``iinj`` overrides the construction-time
+        stimulus (per-tenant admission in ``repro.serve``)."""
+        iv = iinj_v if iinj is None else \
+            jnp.broadcast_to(jnp.asarray(iinj, jnp.float64), (n,))
         Y = xc.batch_init(model, n)
-        sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iinj_v)
+        sts = jax.vmap(lambda y, i: bdf.reinit(model, 0.0, y, i, opts))(Y, iv)
         eq = qops.make(n)
         rec = ev.make_spike_record(n, SPK_CAP)
         z = jnp.zeros((), jnp.int32)
@@ -419,6 +455,7 @@ def make_fap_vardt_runner(model: CellModel, net: Network, iinj, t_end: float,
 
     run.init_carry = init_carry
     run.round_body = round_body
+    run.tenant_round = tenant_round   # (carry, iinj, active, k_qos) — serve
     run.cond = cond
     run.pack = pack           # carry tuple <-> SimCarry (checkpoint tests)
     run.unpack = unpack

@@ -1,0 +1,4 @@
+from repro.serve.service import ServeResult, SimService  # noqa: F401
+from repro.serve.tenants import (LaneState, TenantRequest,  # noqa: F401
+                                 TenantResult, lane_slice, stack_lanes,
+                                 write_lane)

@@ -1,0 +1,136 @@
+"""Lane <-> request bookkeeping for the multi-tenant simulation service.
+
+``repro.serve`` batches T independent experiment replays over a vmapped
+tenant axis of ONE compiled FAP round (``run.tenant_round``): every carry
+leaf gains a leading [T] lane dimension and each lane is an isolated
+network realization (shared topology *shape*, per-tenant stimulus).  The
+helpers here are the pure pytree plumbing that keeps that isolation
+honest:
+
+  * ``stack_lanes`` / ``lane_slice`` / ``write_lane`` — restructure
+    between the batched carry and a single tenant's carry without ever
+    mixing lanes (``write_lane`` touches exactly one index of every
+    leaf),
+  * ``TenantRequest`` / ``TenantResult`` — the service's wire types: a
+    submitted experiment and its single terminal outcome (exactly one of
+    completed / evicted / rejected — the detected-never-silent
+    accounting the property tests assert),
+  * ``LaneState`` — the host-side per-lane state machine record
+    (admission round, retry/backoff bookkeeping, the in-memory
+    round-boundary snapshot quarantine rolls back to).
+
+Because lanes are independent under ``jax.vmap`` and an inactive lane's
+round is a semantic no-op on its state, a tenant's trajectory depends
+only on its own carry and knobs — not on which neighbours happen to be
+admitted, quarantined or shed.  That is the invariant behind the
+solo-vs-batch bitwise-identity tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --- batched-carry plumbing -------------------------------------------------
+
+def stack_lanes(carries):
+    """Stack per-tenant carry pytrees along a new leading lane axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+
+
+def lane_slice(batched, k: int):
+    """One tenant's carry: index every leaf's leading lane axis at ``k``.
+
+    The slice is a fresh pytree of (immutable) arrays — holding it as a
+    quarantine snapshot is safe without copying."""
+    return jax.tree_util.tree_map(lambda x: x[k], batched)
+
+
+def write_lane(batched, k: int, lane_tree):
+    """Write one tenant's carry back into lane ``k`` of the batch.
+
+    Touches exactly index ``k`` of every leaf — the other lanes' values
+    are preserved bitwise (admission, rollback and fault injection all
+    go through here so cross-tenant perturbation is impossible by
+    construction)."""
+    return jax.tree_util.tree_map(lambda b, v: b.at[k].set(v),
+                                  batched, lane_tree)
+
+
+# --- wire types -------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TenantRequest:
+    """One experiment replay submitted to the service.
+
+    rid:             caller-chosen unique request id.
+    iinj:            per-tenant stimulus (scalar injected current; the
+                     five-generator suite's regimes are all reachable by
+                     scalar iinj over the shared topology shape).
+    qos:             QoS class, higher = more important.  Admission pops
+                     highest class first; overload/queue-full shedding
+                     evicts lowest class first; ``SimService.qos_caps``
+                     maps a class to its per-round frontier cap (the
+                     traced ``k_qos`` of ``run.tenant_round`` — the
+                     per-tenant realization of the batch_cap/spike_cap
+                     family of knobs).
+    t_target:        simulated-time goal (ms); None = the service's
+                     ``t_end``.  Completion is ``min lane clock >=
+                     t_target``.
+    deadline_rounds: max service rounds after admission (0 = none) —
+                     exceeded tenants are *evicted*, never silently kept.
+    deadline_s:      wall-clock deadline after admission (0 = none).
+    max_retries:     per-tenant quarantine-retry budget override
+                     (None = the service backoff policy's).
+    """
+    rid: int
+    iinj: float = 0.0
+    qos: int = 1
+    t_target: Optional[float] = None
+    deadline_rounds: int = 0
+    deadline_s: float = 0.0
+    max_retries: Optional[int] = None
+
+
+@dataclass
+class TenantResult:
+    """The single terminal outcome of a request — every submitted rid
+    gets exactly one, whatever happens (completed / evicted / rejected;
+    ``reason`` says why for the non-completed ones)."""
+    rid: int
+    status: str                      # "completed" | "evicted" | "rejected"
+    reason: str = ""
+    times: Optional[np.ndarray] = None    # f64[N, S] spike times (+inf pad)
+    count: Optional[np.ndarray] = None    # i32[N] per-neuron spike counts
+    overflow: int = 0
+    rounds: int = 0                  # service rounds the tenant ran
+    retries: int = 0                 # quarantine-retry attempts consumed
+    wait_rounds: int = 0             # admission latency (queue wait)
+    health: dict = field(default_factory=dict)
+
+
+@dataclass
+class LaneState:
+    """Host-side record of one occupied lane (the service state machine)."""
+    lane: int
+    req: TenantRequest
+    submit_round: int
+    admit_round: int
+    admit_time: float
+    rounds_run: int = 0              # service rounds actually stepped
+    retries: int = 0                 # quarantine-retry attempts consumed
+    nonfinite_rounds: int = 0
+    backoff_until: int = -1          # service round the quarantine lifts
+    quarantined: bool = False
+    snapshot: Any = None             # last clean lane-slice carry
+    snapshot_round: int = 0          # rounds_run the snapshot was taken at
+
+    def health(self) -> dict:
+        return {"rounds": self.rounds_run, "retries": self.retries,
+                "nonfinite_rounds": self.nonfinite_rounds,
+                "quarantined": self.quarantined,
+                "wait_rounds": self.admit_round - self.submit_round}
